@@ -1,0 +1,115 @@
+//! Precision advisor: the hardware-designer workflow the paper's
+//! conclusion describes — feed in *your* layer shapes, get back the
+//! minimum accumulator widths for FWD/BWD/GRAD, normal and chunked,
+//! without "computationally prohibitive brute-force emulations".
+//!
+//! ```sh
+//! cargo run --release --example precision_advisor -- \
+//!     --batch 256 --conv 3x64x7x112 --conv 64x128x3x56 --fc 4096x1000 \
+//!     --nzr-grad 0.5 --chunk 64
+//! ```
+//!
+//! Layer syntax: `--conv CIN x COUT x K x HOUT`  (square kernels/maps),
+//!               `--fc CIN x COUT`.
+
+use abws::nets::layer::{Layer, Network};
+use abws::nets::lengths::{accum_lengths, Gemm};
+use abws::nets::nzr::NzrModel;
+use abws::nets::predict::predict_network;
+use abws::util::argparse::Args;
+
+fn parse_dims(spec: &str) -> Vec<usize> {
+    spec.split('x')
+        .map(|t| t.trim().parse().expect("layer dims must be integers"))
+        .collect()
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(argv.iter().cloned());
+
+    // Collect layers in argv order (Args keeps only the last value per
+    // key, so scan the raw argv for repeatable --conv/--fc options).
+    let mut layers = Vec::new();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--conv" => {
+                let d = parse_dims(&argv[i + 1]);
+                assert_eq!(d.len(), 4, "--conv CINxCOUTxKxHOUT");
+                let idx = layers.len();
+                layers.push(Layer::conv(
+                    &format!("conv{idx}"),
+                    &format!("Layer {idx}"),
+                    d[0],
+                    d[1],
+                    d[2],
+                    d[3],
+                    d[3],
+                ));
+                i += 2;
+            }
+            "--fc" => {
+                let d = parse_dims(&argv[i + 1]);
+                assert_eq!(d.len(), 2, "--fc CINxCOUT");
+                let idx = layers.len();
+                layers.push(Layer::fc(
+                    &format!("fc{idx}"),
+                    &format!("Layer {idx}"),
+                    d[0],
+                    d[1],
+                ));
+                i += 2;
+            }
+            _ => i += 1,
+        }
+    }
+    if layers.is_empty() {
+        // A sensible demo network if none was given.
+        layers = vec![
+            Layer::conv("conv0", "Layer 0", 3, 64, 7, 112, 112),
+            Layer::conv("conv1", "Layer 1", 64, 128, 3, 28, 28),
+            Layer::fc("fc", "Layer 2", 2048, 1000),
+        ];
+        println!("(no layers given — using a demo stem; see the header for syntax)\n");
+    }
+
+    let net = Network {
+        name: "custom".into(),
+        batch: args.get_usize("batch", 256),
+        layers,
+        first_layer: 0,
+    };
+    let nzr = NzrModel::uniform(
+        args.get_f64("nzr-fwd", 1.0),
+        args.get_f64("nzr-bwd", 0.5),
+        args.get_f64("nzr-grad", 0.5),
+    );
+    let chunk = args.get_usize("chunk", 64);
+    let m_p = args.get_u32("mp", 5);
+
+    let pred = predict_network(&net, &nzr, m_p, chunk);
+    println!(
+        "{:<10} {:<10} {:>10} {:>16} {:>16}",
+        "layer", "gemm", "length", "m_acc (normal)", "m_acc (chunked)"
+    );
+    for (layer, lp) in net.layers.iter().zip(&pred.layers) {
+        let lengths = accum_lengths(&net, layer);
+        for gemm in Gemm::ALL {
+            if let Some(Some(p)) = lp.per_gemm.get(gemm.name()) {
+                println!(
+                    "{:<10} {:<10} {:>10} {:>16} {:>16}",
+                    lp.layer,
+                    gemm.name(),
+                    lengths.get(gemm),
+                    p.normal,
+                    p.chunked
+                );
+            }
+        }
+    }
+    println!(
+        "\nAccumulator format: (1, 6, m_acc) floating-point; inputs (1,5,2); \
+         cut-off v(n) < 50 (paper Eq. 6)."
+    );
+}

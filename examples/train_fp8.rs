@@ -1,0 +1,123 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): train the AOT-compiled model
+//! on the synthetic classification workload through the full three-layer
+//! stack — Pallas kernel → JAX train step → HLO artifact → Rust PJRT
+//! runtime — at the baseline, the predicted precision, and one bit below
+//! it, logging loss curves and the final-accuracy comparison.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example train_fp8 -- --steps 300
+//! ```
+//!
+//! Results land in `results/train_fp8.{json,csv}`.
+
+use abws::coordinator::experiment::{ExperimentResult, ResultSink};
+use abws::data::synth::{generate, SynthSpec};
+use abws::runtime::{ArtifactStore, Runtime, TrainStepExecutor};
+use abws::trainer::native::{NativeTrainer, PrecisionPlan, TrainConfig};
+use abws::util::argparse::Args;
+use abws::util::json::Json;
+use abws::vrr::solver::{min_m_acc, AccumSpec};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let steps = args.get_usize("steps", 300);
+    let seed = args.get_i64("seed", 42) as u64;
+
+    let store = ArtifactStore::open(args.get_or("artifacts", "artifacts"))?;
+    store.verify()?;
+    let d = store.dims;
+    println!(
+        "artifacts: batch={} dim={} hidden={} classes={} ({} variants)",
+        d.batch,
+        d.dim,
+        d.hidden,
+        d.classes,
+        store.variants.len()
+    );
+
+    // The model's binding accumulation is the FWD GEMM over `dim`.
+    let predicted = min_m_acc(&AccumSpec::plain(d.dim));
+    let below = predicted.saturating_sub(1).max(4);
+    println!("predicted m_acc for n={}: {predicted} (PP-1: {below})", d.dim);
+
+    // Pick the artifact variants closest to the prediction ladder.
+    let pick = |target: u32| -> String {
+        let mut best: Option<(u32, String)> = None;
+        for name in store.variants.keys() {
+            if let Some(m) = name
+                .strip_prefix("macc")
+                .and_then(|s| s.split('_').next())
+                .and_then(|s| s.parse::<u32>().ok())
+            {
+                if name.contains("chunk") {
+                    continue;
+                }
+                let d = m.abs_diff(target);
+                if best.as_ref().map(|(bd, _)| d < *bd).unwrap_or(true) {
+                    best = Some((d, name.clone()));
+                }
+            }
+        }
+        best.expect("no macc variants in artifact store").1
+    };
+    let variants = vec![
+        ("baseline".to_string(), "full-precision accumulation"),
+        (pick(predicted), "predicted precision (PP=0)"),
+        (pick(below), "one bit below (PP=-1)"),
+    ];
+
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let (train, test) = generate(&SynthSpec {
+        dim: d.dim,
+        classes: d.classes,
+        noise: args.get_f64("noise", 1.4),
+        seed: args.get_i64("data-seed", 1234) as u64,
+        ..Default::default()
+    });
+
+    let mut result = ExperimentResult::new("train_fp8");
+    for (variant, label) in &variants {
+        let t0 = std::time::Instant::now();
+        let mut exec = TrainStepExecutor::new(&rt, &store, variant, seed)?;
+        let metrics = exec.train(&train, steps)?;
+        let wall = t0.elapsed();
+
+        // Evaluate on the held-out set with the trained parameters.
+        let (w1, w2) = exec.params()?;
+        let cfg = TrainConfig {
+            hidden: d.hidden,
+            batch: d.batch,
+            ..Default::default()
+        };
+        let mut evaluator =
+            NativeTrainer::new(d.dim, d.classes, PrecisionPlan::baseline(), cfg);
+        evaluator.w1 = w1;
+        evaluator.w2 = w2;
+        let test_acc = evaluator.evaluate(&test);
+
+        let steps_run = metrics.steps.len();
+        let sps = steps_run as f64 / wall.as_secs_f64();
+        println!(
+            "{variant:<16} [{label}] final-loss {:>8.4}  test-acc {:>6.3}  \
+             diverged {}  ({steps_run} steps, {sps:.1} steps/s)",
+            metrics.tail_loss(20).unwrap_or(f64::NAN),
+            test_acc,
+            metrics.diverged,
+        );
+        result.push_row(&[
+            ("variant", Json::from(variant.as_str())),
+            ("label", Json::from(*label)),
+            ("final_loss", Json::from(metrics.tail_loss(20).unwrap_or(f64::NAN))),
+            ("test_acc", Json::from(test_acc)),
+            ("diverged", Json::from(metrics.diverged)),
+            ("steps_per_sec", Json::from(sps)),
+            ("loss_curve", metrics.to_json().get("loss").unwrap().clone()),
+        ]);
+    }
+
+    let sink = ResultSink::new("results")?;
+    sink.write(&result)?;
+    println!("wrote results/train_fp8.json");
+    Ok(())
+}

@@ -1,0 +1,124 @@
+"""AOT lowering — the only build-time entry point (`make artifacts`).
+
+Lowers the train step (model.py) for a set of precision variants to HLO
+**text** artifacts the Rust runtime loads via PJRT, plus a standalone
+rp-GEMM kernel artifact, a manifest.json describing them, and the VRR
+golden file for the cross-language formula test.
+
+HLO text (not ``.serialize()``): jax ≥ 0.5 emits HloModuleProto with
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.rp_gemm import rp_matmul
+from .model import ModelConfig, PrecisionPlan, example_args, make_train_step
+from . import vrr as vrr_py
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def default_variants(cfg: ModelConfig) -> dict[str, PrecisionPlan]:
+    """The artifact set: baseline + predicted ± PP, normal and chunked.
+
+    The model's accumulation lengths are FWD: dim/hidden, BWD: classes,
+    GRAD: batch. With dim=256 the binding length is the FWD dim — the Rust
+    side solves for exact minima; here we bake a ladder wide enough to
+    cover PP ∈ {+1, 0, −1, −2} around any prediction for these dims.
+    """
+    variants: dict[str, PrecisionPlan] = {"baseline": PrecisionPlan.baseline()}
+    for m_acc in (4, 5, 6, 7, 8, 10, 12):
+        # chunk=1 → strictly sequential partial sums (the paper's "normal
+        # accumulation"); chunk=64 → the chunk-based accumulation arm.
+        variants[f"macc{m_acc}"] = PrecisionPlan.uniform(m_acc, chunk=1)
+        variants[f"macc{m_acc}_chunk64"] = PrecisionPlan.uniform(m_acc, chunk=64)
+    return variants
+
+
+def lower_variant(name: str, plan: PrecisionPlan, cfg: ModelConfig, out_dir: str) -> str:
+    step = make_train_step(plan, cfg)
+    lowered = jax.jit(step).lower(*example_args(cfg))
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"train_step_{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def lower_kernel_artifact(cfg: ModelConfig, out_dir: str) -> str:
+    """Standalone rp-GEMM artifact (runtime kernel smoke tests)."""
+    def fn(a, b):
+        return rp_matmul(a, b, m_acc=8, chunk=64)
+
+    spec_a = jax.ShapeDtypeStruct((8, 256), jnp.float32)
+    spec_b = jax.ShapeDtypeStruct((256, 8), jnp.float32)
+    lowered = jax.jit(fn).lower(spec_a, spec_b)
+    path = os.path.join(out_dir, "rp_gemm_macc8_chunk64.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return path
+
+
+def write_vrr_golden(repo_root: str) -> str:
+    golden_dir = os.path.join(repo_root, "tests", "golden")
+    os.makedirs(golden_dir, exist_ok=True)
+    path = os.path.join(golden_dir, "vrr_golden.json")
+    with open(path, "w") as f:
+        json.dump({"cases": vrr_py.golden_grid()}, f, indent=1)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--dim", type=int, default=256)
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--classes", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = ModelConfig(batch=args.batch, dim=args.dim, hidden=args.hidden,
+                      classes=args.classes)
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    variants = default_variants(cfg)
+    for name, plan in variants.items():
+        path = lower_variant(name, plan, cfg, out_dir)
+        print(f"wrote {path}")
+    kpath = lower_kernel_artifact(cfg, out_dir)
+    print(f"wrote {kpath}")
+
+    manifest = {
+        "batch": cfg.batch,
+        "dim": cfg.dim,
+        "hidden": cfg.hidden,
+        "classes": cfg.classes,
+        "variants": sorted(variants.keys()),
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {out_dir}/manifest.json ({len(variants)} variants)")
+
+    repo_root = os.path.dirname(os.path.abspath(out_dir))
+    print(f"wrote {write_vrr_golden(repo_root)}")
+
+
+if __name__ == "__main__":
+    main()

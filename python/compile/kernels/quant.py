@@ -1,0 +1,92 @@
+"""Mantissa fake-quantization in JAX — the L1 primitive.
+
+Rounds f32 values to a custom (1, e, m) floating-point format with
+round-to-nearest-even, IEEE-style exponent clamping, gradual underflow and
+saturating overflow — the same semantics as the Rust softfloat simulator
+(rust/src/softfloat/quant.rs), which the cross-language tests pin down.
+
+The implementation uses ``jnp.frexp`` to get the *exact* binary exponent
+(log2-based exponent extraction is wrong on binade boundaries), then
+scales so the target quantum is 1.0, rounds half-to-even (``jnp.round``),
+and scales back. All ops are elementwise VPU-friendly primitives, so the
+function can be used inside Pallas kernels and lowers to plain HLO.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fmt_constants(e_bits: int, m_bits: int):
+    """IEEE-style derived constants of a (1, e, m) format."""
+    bias = (1 << (e_bits - 1)) - 1
+    e_max = bias
+    e_min = 1 - bias
+    max_finite = (2.0 - 2.0 ** (-m_bits)) * (2.0 ** e_max)
+    return bias, e_min, e_max, max_finite
+
+
+def quantize(x, m_bits: int, e_bits: int = 6):
+    """Quantize ``x`` (f32 tensor) to the (1, e_bits, m_bits) format.
+
+    Semantics (mirrors rust/src/softfloat/quant.rs::quantize, RNE mode):
+      * zero / non-finite values pass through;
+      * round-to-nearest-even on the mantissa at the value's own binade;
+      * gradual underflow: quantum freezes at ``2^(e_min - m)`` below the
+        normal range (values under half the smallest subnormal flush to 0);
+      * overflow *saturates* to ±max_finite (the training-friendly choice;
+        the Rust simulator returns ±inf under RNE — divergence detection
+        treats both identically, and the AOT model must avoid inf
+        poisoning whole tensors).
+    """
+    _, e_min, _, max_finite = fmt_constants(e_bits, m_bits)
+    x = jnp.asarray(x, jnp.float32)
+
+    # Input envelope: f32-subnormal inputs (|x| < 2^-126) flush to ±0.
+    # They sit below every simulated format's subnormal range except the
+    # (1,8,23) f32-replica (a documented envelope limit — jax's frexp and
+    # ldexp do not handle f32 subnormals), and keeping them would produce
+    # wrong exponents downstream.
+    x = jnp.where(jnp.abs(x) < jnp.float32(2.0 ** -126), x * 0.0, x)
+
+    # Exact exponent: frexp returns mant in [0.5, 1), exp with x = mant*2^exp,
+    # so floor(log2|x|) = exp - 1.
+    _, raw_exp = jnp.frexp(jnp.where(x == 0, 1.0, x))
+    e = raw_exp.astype(jnp.int32) - 1
+    # Quantum exponent, frozen in the subnormal range.
+    q_exp = jnp.where(e < e_min, e_min - m_bits, e - m_bits)
+
+    # Scale so the quantum is 1.0, round half-to-even, scale back.
+    # ldexp (not exp2: the f32 exp2 polynomial is off by an ulp even at
+    # integer arguments), staged through 2^64 because jax's ldexp neither
+    # accepts nor produces f32 subnormals in one hop. The up-scaled value
+    # is ≤ 2^(m+1), so both stages are exact.
+    scaled = jnp.ldexp(jnp.ldexp(x, 64), -q_exp - 64)
+    rounded = jnp.round(scaled)  # numpy semantics: round-half-to-even
+    # Down-scale: the last multiply may legitimately round into an f32
+    # subnormal (only when simulating f32-wide formats) — a single
+    # correctly-rounded multiply.
+    y = jnp.ldexp(rounded, q_exp + 64) * jnp.float32(2.0 ** -64)
+
+    # Saturating overflow.
+    y = jnp.clip(y, -max_finite, max_finite)
+    # Zeros and non-finite inputs pass through.
+    y = jnp.where(x == 0, x, y)
+    y = jnp.where(jnp.isfinite(x), y, x)
+    return y
+
+
+def quantize_fp8_152(x):
+    """The paper's representation format (1,5,2) for inputs."""
+    return quantize(x, m_bits=2, e_bits=5)
+
+
+def quantize_product(x, m_p: int = 5):
+    """Product-term format: m_p mantissa bits, 6 exponent bits
+    (products of two (1,5,2) values are exact at m_p = 5)."""
+    return quantize(x, m_bits=m_p, e_bits=6)
+
+
+def quantize_acc(x, m_acc: int, e_acc: int = 6):
+    """Accumulator format (1, 6, m_acc) — the paper's partial-sum width."""
+    return quantize(x, m_bits=m_acc, e_bits=e_acc)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracle for the reduced-precision GEMM — the correctness
+reference the Pallas kernel is tested against (pytest, hypothesis).
+
+Implements the identical chunked accumulation semantics with an explicit
+``lax.scan`` over chunks (no Pallas machinery), plus an f64 "ideal"
+reference for wide-accumulator sanity checks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .quant import quantize_acc, quantize_fp8_152
+
+
+def rp_matmul_ref(a, b, *, m_acc: int, chunk: int = 64, e_acc: int = 6,
+                  quantize_inputs: bool = True):
+    """Reference chunked reduced-precision matmul (same semantics as
+    rp_gemm.rp_matmul, different machinery)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    chunk = min(chunk, k)
+    assert k % chunk == 0
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    if quantize_inputs:
+        a = quantize_fp8_152(a)
+        b = quantize_fp8_152(b)
+
+    steps = k // chunk
+    # [steps, M, chunk] and [steps, chunk, N] chunk stacks.
+    a_chunks = a.reshape(m, steps, chunk).transpose(1, 0, 2)
+    b_chunks = b.reshape(steps, chunk, n)
+
+    def body(acc, ab):
+        a_blk, b_blk = ab
+        chunk_sum = quantize_acc(
+            jnp.dot(a_blk, b_blk, preferred_element_type=jnp.float32),
+            m_acc, e_acc,
+        )
+        return quantize_acc(acc + chunk_sum, m_acc, e_acc), None
+
+    init = jnp.zeros((m, n), jnp.float32)
+    out, _ = jax.lax.scan(body, init, (a_chunks, b_chunks))
+    return out
+
+
+def ideal_matmul(a, b, *, quantize_inputs: bool = True):
+    """Ideal (f32, effectively exact for these magnitudes) accumulation of
+    the optionally fp8-quantized operands — the 'full precision
+    accumulation' baseline arm."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    if quantize_inputs:
+        a = quantize_fp8_152(a)
+        b = quantize_fp8_152(b)
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def sequential_sum_ref(terms, *, m_acc: int, e_acc: int = 6):
+    """Strictly sequential reduced-precision sum of a 1-D term vector —
+    mirrors rust softfloat::accumulate::sequential_sum for cross-language
+    spot checks."""
+    def body(acc, t):
+        return quantize_acc(acc + t, m_acc, e_acc), None
+
+    out, _ = jax.lax.scan(body, jnp.float32(0.0), jnp.asarray(terms, jnp.float32))
+    return out

@@ -1,0 +1,107 @@
+"""Reduced-precision-accumulation GEMM as a Pallas kernel — Layer 1.
+
+The paper's hardware model: products at ``m_p`` mantissa bits feed an
+accumulator that rounds every partial sum to ``m_acc`` bits; optionally a
+two-level *chunked* accumulation (Wang et al. 2018, paper §4.2).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the K dimension is tiled
+into chunks by the Pallas grid; each grid step computes one chunk's
+partial sum with an MXU-shaped ``jnp.dot`` (the wide intra-chunk adder
+tree of a hardware chunked accumulator), rounds it to the accumulator
+format, and folds it into a running VMEM accumulator that is re-rounded
+after every chunk — exactly Corollary 1's structure. ``chunk=1``
+degenerates to the fully sequential accumulation of Lemma 1/Theorem 1
+(every single product rounded into the running sum).
+
+Pallas runs with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so the kernel lowers to plain HLO; on a real TPU the
+same BlockSpec schedule maps chunks to MXU passes with the accumulator in
+VMEM scratch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quant import quantize_acc, quantize_fp8_152, quantize_product
+
+
+def _rp_matmul_kernel(a_ref, b_ref, o_ref, *, m_acc: int, e_acc: int, m_p: int,
+                      quantize_inputs: bool):
+    """One grid step: fold chunk ``k`` of the K dimension into the output.
+
+    The output block is revisited by every grid step (same index map), so
+    it serves as the inter-chunk accumulator carried across steps.
+    """
+    k = pl.program_id(0)
+
+    a_blk = a_ref[...].astype(jnp.float32)  # [M, chunk]
+    b_blk = b_ref[...].astype(jnp.float32)  # [chunk, N]
+    if quantize_inputs:
+        a_blk = quantize_fp8_152(a_blk)
+        b_blk = quantize_fp8_152(b_blk)
+
+    # Intra-chunk: MXU pass. Products are exact at m_p bits for (1,5,2)
+    # inputs; the chunk partial sum is rounded to the accumulator format
+    # (the hardware chunk adder's output register).
+    chunk_sum = jnp.dot(a_blk, b_blk, preferred_element_type=jnp.float32)
+    chunk_sum = quantize_acc(chunk_sum, m_acc, e_acc)
+    del m_p  # products exact for fp8 inputs; kept in the signature for ablations
+
+    # Inter-chunk: running accumulator re-rounded after every addition —
+    # this is where swamping lives.
+    prev = jnp.where(k == 0, jnp.zeros_like(o_ref[...]), o_ref[...])
+    o_ref[...] = quantize_acc(prev + chunk_sum, m_acc, e_acc)
+
+
+def rp_matmul(a, b, *, m_acc: int, chunk: int = 64, e_acc: int = 6, m_p: int = 5,
+              quantize_inputs: bool = True, interpret: bool = True):
+    """Reduced-precision-accumulation matmul ``a @ b``.
+
+    a: [M, K] f32, b: [K, N] f32; K must be divisible by ``chunk``
+    (callers pad or pick dims accordingly — model.py uses powers of two).
+    Returns [M, N] f32 whose every element went through the chunked
+    reduced-precision accumulation.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    # A chunk longer than K degenerates to a single intra-chunk pass.
+    chunk = min(chunk, k)
+    assert k % chunk == 0, f"K={k} not divisible by chunk={chunk}"
+    steps = k // chunk
+
+    kernel = functools.partial(
+        _rp_matmul_kernel,
+        m_acc=m_acc,
+        e_acc=e_acc,
+        m_p=m_p,
+        quantize_inputs=quantize_inputs,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((m, chunk), lambda i: (0, i)),
+            pl.BlockSpec((chunk, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+
+
+def baseline_matmul(a, b, *, quantize_inputs: bool = True):
+    """The paper's control arm: same (1,5,2) representation quantization,
+    ideal (f32) accumulation."""
+    if quantize_inputs:
+        a = quantize_fp8_152(a)
+        b = quantize_fp8_152(b)
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+__all__ = ["rp_matmul", "baseline_matmul", "quantize_product"]

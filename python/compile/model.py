@@ -1,0 +1,149 @@
+"""Layer 2 — the JAX model: a two-layer MLP classifier whose three GEMMs
+(FWD, BWD, GRAD; paper Fig. 2) each run through the reduced-precision
+accumulation kernel at their own precision, with explicit backward passes
+(mirroring rust/src/trainer/native.rs operation-for-operation).
+
+The train step is a pure function
+``(w1, w2, m1, m2, x, y) -> (w1', w2', m1', m2', loss, acc)``
+so the Rust runtime can carry the state as PJRT literals. Lowered once by
+aot.py; never executed from Python at run time.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.rp_gemm import baseline_matmul, rp_matmul
+
+
+@dataclass(frozen=True)
+class GemmPrecision:
+    """Accumulation precision of one GEMM (None m_acc = ideal/baseline)."""
+
+    m_acc: Optional[int]
+    chunk: int = 64
+
+    def matmul(self, a, b):
+        if self.m_acc is None:
+            return baseline_matmul(a, b)
+        # chunk=1 gives the strictly sequential accumulation; the kernel
+        # requires K % chunk == 0, which holds for the power-of-two dims
+        # the artifacts are lowered with.
+        return rp_matmul(a, b, m_acc=self.m_acc, chunk=self.chunk)
+
+
+@dataclass(frozen=True)
+class PrecisionPlan:
+    """Per-GEMM accumulation precision (the Table-1 unit)."""
+
+    fwd: GemmPrecision
+    bwd: GemmPrecision
+    grad: GemmPrecision
+
+    @staticmethod
+    def baseline() -> "PrecisionPlan":
+        none = GemmPrecision(m_acc=None)
+        return PrecisionPlan(none, none, none)
+
+    @staticmethod
+    def uniform(m_acc: int, chunk: int = 64) -> "PrecisionPlan":
+        g = GemmPrecision(m_acc=m_acc, chunk=chunk)
+        return PrecisionPlan(g, g, g)
+
+    @staticmethod
+    def per_gemm(fwd: int, bwd: int, grad: int, chunk: int = 64) -> "PrecisionPlan":
+        return PrecisionPlan(
+            GemmPrecision(fwd, chunk), GemmPrecision(bwd, chunk), GemmPrecision(grad, chunk)
+        )
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    batch: int = 32
+    dim: int = 256
+    hidden: int = 64
+    classes: int = 10
+    lr: float = 0.05
+    momentum: float = 0.9
+    loss_scale: float = 1000.0
+
+
+def forward(plan: PrecisionPlan, w1, w2, x):
+    """FWD GEMMs; returns (h_pre, h, logits)."""
+    h_pre = plan.fwd.matmul(x, w1)
+    h = jnp.maximum(h_pre, 0.0)
+    logits = plan.fwd.matmul(h, w2)
+    return h_pre, h, logits
+
+
+def train_step(plan: PrecisionPlan, cfg: ModelConfig, w1, w2, m1, m2, x, y):
+    """One SGD-with-momentum step; explicit backward through rp GEMMs."""
+    h_pre, h, logits = forward(plan, w1, w2, x)
+
+    # Softmax cross-entropy and the scaled logits gradient.
+    logits_max = jnp.max(logits, axis=1, keepdims=True)
+    z = logits - logits_max
+    log_probs = z - jnp.log(jnp.sum(jnp.exp(z), axis=1, keepdims=True))
+    onehot = jax.nn.one_hot(y, cfg.classes, dtype=jnp.float32)
+    loss = -jnp.mean(jnp.sum(onehot * log_probs, axis=1))
+    acc = jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+
+    probs = jnp.exp(log_probs)
+    dlogits = (probs - onehot) / cfg.batch
+    dlogits = dlogits * cfg.loss_scale  # loss scaling (Micikevicius 2017)
+
+    # GRAD GEMM: dW2 = hᵀ · dlogits (accumulation across the batch).
+    dw2 = plan.grad.matmul(h.T, dlogits)
+    # BWD GEMM: dh = dlogits · W2ᵀ, ReLU-masked.
+    dh = plan.bwd.matmul(dlogits, w2.T)
+    dh = jnp.where(h_pre > 0, dh, 0.0)
+    # GRAD GEMM: dW1 = xᵀ · dh.
+    dw1 = plan.grad.matmul(x.T, dh)
+
+    # SGD with momentum on unscaled gradients.
+    inv = 1.0 / cfg.loss_scale
+    m1n = cfg.momentum * m1 + dw1 * inv
+    m2n = cfg.momentum * m2 + dw2 * inv
+    w1n = w1 - cfg.lr * m1n
+    w2n = w2 - cfg.lr * m2n
+    return w1n, w2n, m1n, m2n, loss, acc
+
+
+def make_train_step(plan: PrecisionPlan, cfg: ModelConfig):
+    """Bind plan/config; returns f(w1, w2, m1, m2, x, y) -> 6-tuple."""
+
+    def step(w1, w2, m1, m2, x, y):
+        return train_step(plan, cfg, w1, w2, m1, m2, x, y)
+
+    return step
+
+
+def example_args(cfg: ModelConfig):
+    """ShapeDtypeStructs matching the Rust runtime calling convention."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((cfg.dim, cfg.hidden), f32),      # w1
+        jax.ShapeDtypeStruct((cfg.hidden, cfg.classes), f32),  # w2
+        jax.ShapeDtypeStruct((cfg.dim, cfg.hidden), f32),      # m1
+        jax.ShapeDtypeStruct((cfg.hidden, cfg.classes), f32),  # m2
+        jax.ShapeDtypeStruct((cfg.batch, cfg.dim), f32),       # x
+        jax.ShapeDtypeStruct((cfg.batch,), jnp.int32),         # y
+    )
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """He-initialized parameters (python-side tests only; the Rust runtime
+    initializes its own state)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w1 = jax.random.normal(k1, (cfg.dim, cfg.hidden), jnp.float32) * (2.0 / cfg.dim) ** 0.5
+    w2 = (
+        jax.random.normal(k2, (cfg.hidden, cfg.classes), jnp.float32)
+        * (2.0 / cfg.hidden) ** 0.5
+    )
+    m1 = jnp.zeros_like(w1)
+    m2 = jnp.zeros_like(w2)
+    return w1, w2, m1, m2

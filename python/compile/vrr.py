@@ -1,0 +1,128 @@
+"""Python mirror of the VRR analysis (paper Eqs. 1-6).
+
+Kept deliberately independent of the Rust implementation
+(rust/src/vrr/): same formulas, different code — the golden-file test
+(tests/golden/vrr_golden.json, checked by both pytest and `cargo test`)
+pins the two down against each other.
+"""
+
+from __future__ import annotations
+
+import math
+
+
+def two_q(x: float) -> float:
+    """2·Q(x) = P[|N(0,1)| > x] = erfc(x/√2)."""
+    return math.erfc(x / math.sqrt(2.0))
+
+
+def tail_prob(threshold_log2: float, i: float) -> float:
+    """2Q(2^threshold / √i)."""
+    return two_q(2.0 ** threshold_log2 / math.sqrt(i))
+
+
+def vrr_full_swamping(m_acc: int, n: int) -> float:
+    """Lemma 1 (Eq. 1)."""
+    if n <= 2:
+        return 1.0
+    num = 0.0
+    k = 0.0
+    tail_prev = tail_prob(m_acc, 1.0)
+    for i in range(2, n):
+        tail_now = tail_prob(m_acc, float(i))
+        q_i = tail_now * (1.0 - tail_prev)
+        num += i * q_i
+        k += q_i
+        tail_prev = tail_now
+    q_tilde = 1.0 - tail_prob(m_acc, float(n))
+    num += n * q_tilde
+    k += q_tilde
+    if k == 0.0:
+        return 0.0
+    return num / (k * n)
+
+
+def _stage_loss_sum(upto: int) -> float:
+    return sum(2.0 ** j * (2.0 ** j - 1.0) * (2.0 ** (j + 1) - 1.0)
+               for j in range(1, upto + 1))
+
+
+def alpha(m_acc: int, m_p: int, stages: int) -> float:
+    return 2.0 ** (m_acc - 3 * m_p) / 3.0 * _stage_loss_sum(stages)
+
+
+def vrr(m_acc: int, m_p: int, n: int) -> float:
+    """Theorem 1 (Eq. 2)."""
+    if n <= 2:
+        return 1.0
+    nf = float(n)
+
+    a_full = alpha(m_acc, m_p, m_p)
+    term1 = 0.0
+    k1 = 0.0
+    start = n if a_full >= n - 1 else max(int(math.floor(a_full)) + 1, 2)
+    if start < n:
+        tail_prev = tail_prob(m_acc, float(start - 1))
+        for i in range(start, n):
+            tail_now = tail_prob(m_acc, float(i))
+            q_i = tail_now * (1.0 - tail_prev)
+            term1 += (i - a_full) * q_i
+            k1 += q_i
+            tail_prev = tail_now
+
+    term2 = 0.0
+    k2 = 0.0
+    for j_r in range(2, m_p + 1):
+        a_jr = alpha(m_acc, m_p, j_r - 1)
+        if nf <= a_jr:
+            continue
+        n_prev = 2.0 ** (m_acc - m_p + j_r)
+        lo = tail_prob(m_acc - m_p + j_r - 1, nf)
+        hi = tail_prob(m_acc - m_p + j_r, nf)
+        q_jr = n_prev * lo * (1.0 - hi)
+        term2 += (nf - a_jr) * q_jr
+        k2 += q_jr
+
+    k3 = 1.0 - tail_prob(m_acc - m_p + 1, nf)
+    k = k1 + k2 + k3
+    if k == 0.0:
+        return 0.0
+    return min(max((term1 + term2 + nf * k3) / (k * nf), 0.0), 1.0)
+
+
+def interchunk_m_p(m_acc: int, m_p: int, n1: int) -> int:
+    growth = int(round(math.log2(max(n1, 1))))
+    return min(m_p + growth, m_acc)
+
+
+def vrr_chunked(m_acc: int, m_p: int, n1: int, n2: int) -> float:
+    """Corollary 1 (Eq. 3)."""
+    return vrr(m_acc, m_p, n1) * vrr(m_acc, interchunk_m_p(m_acc, m_p, n1), n2)
+
+
+def log_variance_lost(vrr_value: float, n: int) -> float:
+    """log v(n) = n (1 - VRR)  (Eq. 6 in log space)."""
+    return n * (1.0 - vrr_value)
+
+
+CUTOFF_LN = math.log(50.0)
+
+
+def is_suitable(vrr_value: float, n: int) -> bool:
+    return log_variance_lost(vrr_value, n) < CUTOFF_LN
+
+
+def golden_grid():
+    """The (m_acc, m_p, n) grid pinned by tests/golden/vrr_golden.json."""
+    cases = []
+    for m_acc in (4, 6, 8, 10, 12, 15):
+        for n in (16, 256, 4096, 65536, 1048576):
+            cases.append({
+                "m_acc": m_acc,
+                "m_p": 5,
+                "n": n,
+                "vrr": vrr(m_acc, 5, n),
+                "vrr_full": vrr_full_swamping(m_acc, n),
+                "vrr_chunked64": vrr_chunked(m_acc, 5, 64, max(n // 64, 1)),
+            })
+    return cases

@@ -1,0 +1,64 @@
+"""AOT pipeline tests: HLO-text lowering shape, manifest consistency,
+and variant coverage — the contract the Rust runtime relies on."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile.aot import default_variants, to_hlo_text
+from compile.model import ModelConfig, PrecisionPlan, example_args, make_train_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestLoweringContract:
+    def test_hlo_text_shape(self):
+        cfg = ModelConfig(batch=8, dim=32, hidden=16, classes=4)
+        step = make_train_step(PrecisionPlan.uniform(8, chunk=16), cfg)
+        text = to_hlo_text(jax.jit(step).lower(*example_args(cfg)))
+        # The Rust loader parses HLO text: must be a module with an ENTRY.
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+        # Six inputs (w1 w2 m1 m2 x y), tuple output with six leaves.
+        assert text.count("parameter(") >= 6
+
+    def test_default_variants_cover_the_pp_ladder(self):
+        cfg = ModelConfig()
+        variants = default_variants(cfg)
+        assert "baseline" in variants
+        # Normal and chunked arm for every m_acc in the ladder.
+        for m in (4, 5, 6, 7, 8, 10, 12):
+            assert f"macc{m}" in variants
+            assert f"macc{m}_chunk64" in variants
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACT_DIR, "manifest.json")),
+    reason="artifacts not generated (run `make artifacts`)",
+)
+class TestGeneratedArtifacts:
+    def manifest(self):
+        with open(os.path.join(ARTIFACT_DIR, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_manifest_lists_existing_files(self):
+        man = self.manifest()
+        assert man["variants"], "no variants in manifest"
+        for name in man["variants"]:
+            path = os.path.join(ARTIFACT_DIR, f"train_step_{name}.hlo.txt")
+            assert os.path.exists(path), f"missing artifact {path}"
+
+    def test_manifest_dims_are_positive(self):
+        man = self.manifest()
+        for key in ("batch", "dim", "hidden", "classes"):
+            assert man[key] > 0
+
+    def test_artifacts_are_hlo_text(self):
+        man = self.manifest()
+        for name in man["variants"][:3]:
+            path = os.path.join(ARTIFACT_DIR, f"train_step_{name}.hlo.txt")
+            with open(path) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), f"{name}: {head!r}"

@@ -1,0 +1,116 @@
+"""The CORE L1 correctness signal: the Pallas kernel vs the pure-jnp
+oracle, exact equality, across hypothesis-driven shape/precision sweeps,
+plus physical checks (variance loss, chunking recovery) on larger sizes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import ideal_matmul, rp_matmul_ref, sequential_sum_ref
+from compile.kernels.rp_gemm import baseline_matmul, rp_matmul
+
+
+def randn(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+class TestKernelVsOracle:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        m=st.integers(1, 9),
+        n=st.integers(1, 9),
+        steps=st.integers(1, 8),
+        chunk=st.sampled_from([1, 2, 4, 8, 16]),
+        m_acc=st.sampled_from([3, 5, 6, 8, 10, 12, 16]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_exact_match_random_shapes(self, m, n, steps, chunk, m_acc, seed):
+        rng = np.random.default_rng(seed)
+        k = steps * chunk
+        a, b = randn(rng, m, k), randn(rng, k, n)
+        got = rp_matmul(a, b, m_acc=m_acc, chunk=chunk)
+        want = rp_matmul_ref(a, b, m_acc=m_acc, chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        m_acc=st.sampled_from([4, 6, 8]),
+        scale=st.sampled_from([0.01, 1.0, 100.0]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_exact_match_across_scales(self, m_acc, scale, seed):
+        # Dynamic range matters for swamping — sweep operand scales.
+        rng = np.random.default_rng(seed)
+        a = randn(rng, 4, 128) * scale
+        b = randn(rng, 128, 4) * scale
+        got = rp_matmul(a, b, m_acc=m_acc, chunk=16)
+        want = rp_matmul_ref(a, b, m_acc=m_acc, chunk=16)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_sequential_chunk1_equals_scan(self):
+        # chunk=1 is the strictly sequential accumulation; cross-check one
+        # output element against the 1-D sequential reference.
+        rng = np.random.default_rng(7)
+        a, b = randn(rng, 1, 64), randn(rng, 64, 1)
+        got = rp_matmul(a, b, m_acc=6, chunk=1)[0, 0]
+        from compile.kernels.quant import quantize_fp8_152
+        terms = (
+            np.asarray(quantize_fp8_152(jnp.asarray(a[0])))
+            * np.asarray(quantize_fp8_152(jnp.asarray(b[:, 0])))
+        )
+        want = sequential_sum_ref(terms, m_acc=6)
+        assert float(got) == float(want)
+
+    def test_oversized_chunk_degenerates(self):
+        rng = np.random.default_rng(9)
+        a, b = randn(rng, 3, 32), randn(rng, 32, 3)
+        big = rp_matmul(a, b, m_acc=8, chunk=512)
+        exact = rp_matmul(a, b, m_acc=8, chunk=32)
+        np.testing.assert_array_equal(np.asarray(big), np.asarray(exact))
+
+
+class TestPhysicalBehaviour:
+    def test_wide_accumulator_matches_ideal(self):
+        rng = np.random.default_rng(1)
+        a, b = randn(rng, 8, 256), randn(rng, 256, 8)
+        got = rp_matmul(a, b, m_acc=22, chunk=64)
+        want = ideal_matmul(a, b)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+    def test_narrow_accumulator_loses_variance(self):
+        rng = np.random.default_rng(2)
+        k = 8192
+        a, b = randn(rng, 8, k), randn(rng, k, 8)
+        narrow = np.asarray(rp_matmul(a, b, m_acc=4, chunk=1))
+        ideal = np.asarray(ideal_matmul(a, b))
+        assert narrow.var() < 0.8 * ideal.var(), (narrow.var(), ideal.var())
+
+    def test_chunking_recovers_variance(self):
+        rng = np.random.default_rng(3)
+        k = 8192
+        a, b = randn(rng, 8, k), randn(rng, k, 8)
+        seq = np.asarray(rp_matmul(a, b, m_acc=4, chunk=1))
+        chunked = np.asarray(rp_matmul(a, b, m_acc=4, chunk=64))
+        ideal = np.asarray(ideal_matmul(a, b))
+        assert chunked.var() > seq.var()
+        assert chunked.var() > 0.7 * ideal.var()
+
+    def test_baseline_is_fp8_repr_with_ideal_acc(self):
+        rng = np.random.default_rng(4)
+        a, b = randn(rng, 4, 64), randn(rng, 64, 4)
+        got = np.asarray(baseline_matmul(a, b))
+        want = np.asarray(ideal_matmul(a, b))
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    def test_quantize_inputs_flag(self):
+        rng = np.random.default_rng(5)
+        a, b = randn(rng, 4, 64), randn(rng, 64, 4)
+        raw = np.asarray(rp_matmul(a, b, m_acc=20, chunk=64, quantize_inputs=False))
+        f32 = a @ b
+        np.testing.assert_allclose(raw, f32, rtol=1e-4, atol=1e-5)
+
+    def test_dim_mismatch_raises(self):
+        with pytest.raises(AssertionError):
+            rp_matmul(np.zeros((2, 8), np.float32), np.zeros((4, 2), np.float32), m_acc=8)

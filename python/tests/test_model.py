@@ -1,0 +1,125 @@
+"""L2 model tests: train-step shapes, convergence at adequate precision,
+divergence/degradation at starved precision, loss-scaling plumbing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    GemmPrecision,
+    ModelConfig,
+    PrecisionPlan,
+    example_args,
+    forward,
+    init_params,
+    make_train_step,
+)
+
+
+CFG = ModelConfig(batch=16, dim=64, hidden=32, classes=4)
+
+
+def synth_batch(cfg, seed=0, noise=1.0):
+    """Gaussian-mixture batch matching rust/src/data/synth.rs statistics."""
+    rng = np.random.default_rng(seed)
+    means = rng.normal(size=(cfg.classes, cfg.dim))
+    means /= np.linalg.norm(means, axis=1, keepdims=True)
+    y = rng.integers(0, cfg.classes, size=cfg.batch)
+    x = means[y] + noise * rng.normal(size=(cfg.batch, cfg.dim)) / np.sqrt(cfg.dim)
+    return x.astype(np.float32), y.astype(np.int32)
+
+
+def run_training(plan, cfg, steps=120, seed=0, noise=1.0):
+    step_fn = jax.jit(make_train_step(plan, cfg))
+    w1, w2, m1, m2 = init_params(cfg, seed)
+    losses, accs = [], []
+    for i in range(steps):
+        x, y = synth_batch(cfg, seed=1000 + (i % 8), noise=noise)
+        w1, w2, m1, m2, loss, acc = step_fn(w1, w2, m1, m2, x, y)
+        losses.append(float(loss))
+        accs.append(float(acc))
+    return losses, accs
+
+
+class TestShapes:
+    def test_example_args_match_calling_convention(self):
+        args = example_args(CFG)
+        assert args[0].shape == (CFG.dim, CFG.hidden)
+        assert args[4].shape == (CFG.batch, CFG.dim)
+        assert args[5].dtype == jnp.int32
+
+    def test_train_step_output_arity_and_shapes(self):
+        step = make_train_step(PrecisionPlan.baseline(), CFG)
+        w1, w2, m1, m2 = init_params(CFG)
+        x, y = synth_batch(CFG)
+        out = step(w1, w2, m1, m2, x, y)
+        assert len(out) == 6
+        assert out[0].shape == w1.shape
+        assert out[1].shape == w2.shape
+        assert out[4].shape == ()  # loss
+        assert out[5].shape == ()  # acc
+
+    def test_forward_shapes(self):
+        w1, w2, _, _ = init_params(CFG)
+        x, _ = synth_batch(CFG)
+        h_pre, h, logits = forward(PrecisionPlan.baseline(), w1, w2, x)
+        assert h.shape == (CFG.batch, CFG.hidden)
+        assert logits.shape == (CFG.batch, CFG.classes)
+        assert bool(jnp.all(h >= 0))
+
+
+class TestTraining:
+    def test_baseline_converges(self):
+        losses, accs = run_training(PrecisionPlan.baseline(), CFG)
+        assert losses[-1] < 0.5 * losses[0], (losses[0], losses[-1])
+        assert np.mean(accs[-20:]) > 0.8
+
+    def test_adequate_precision_tracks_baseline(self):
+        base_losses, base_accs = run_training(PrecisionPlan.baseline(), CFG)
+        rp_losses, rp_accs = run_training(PrecisionPlan.uniform(12, chunk=64), CFG)
+        assert np.mean(rp_accs[-20:]) > np.mean(base_accs[-20:]) - 0.1
+        assert rp_losses[-1] < 0.7 * rp_losses[0]
+
+    def test_starved_precision_degrades(self):
+        # m_acc=1 on a harder task must clearly underperform the baseline.
+        base_losses, _ = run_training(PrecisionPlan.baseline(), CFG, noise=2.0)
+        bad_losses, _ = run_training(PrecisionPlan.uniform(1, chunk=1), CFG, noise=2.0)
+        assert (
+            not np.isfinite(bad_losses[-1])
+            or np.mean(bad_losses[-20:]) > 1.25 * np.mean(base_losses[-20:])
+        ), (np.mean(bad_losses[-20:]), np.mean(base_losses[-20:]))
+
+    def test_momentum_state_updates(self):
+        step = make_train_step(PrecisionPlan.baseline(), CFG)
+        w1, w2, m1, m2 = init_params(CFG)
+        x, y = synth_batch(CFG)
+        _, _, m1n, m2n, _, _ = step(w1, w2, m1, m2, x, y)
+        assert float(jnp.abs(m1n).max()) > 0
+        assert float(jnp.abs(m2n).max()) > 0
+
+
+class TestLowering:
+    def test_all_plans_lower_to_hlo(self):
+        from compile.aot import to_hlo_text
+
+        for plan in [
+            PrecisionPlan.baseline(),
+            PrecisionPlan.uniform(8, chunk=64),
+            PrecisionPlan.per_gemm(7, 5, 9, chunk=1),
+        ]:
+            step = make_train_step(plan, CFG)
+            lowered = jax.jit(step).lower(*example_args(CFG))
+            text = to_hlo_text(lowered)
+            assert text.startswith("HloModule")
+            assert "f32[" in text
+
+    def test_lowered_step_runs_and_matches_eager(self):
+        plan = PrecisionPlan.uniform(8, chunk=16)
+        step = make_train_step(plan, CFG)
+        w1, w2, m1, m2 = init_params(CFG, seed=3)
+        x, y = synth_batch(CFG, seed=3)
+        eager = step(w1, w2, m1, m2, x, y)
+        jitted = jax.jit(step)(w1, w2, m1, m2, x, y)
+        for e, j in zip(eager, jitted):
+            np.testing.assert_allclose(np.asarray(e), np.asarray(j), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,40 @@
+//! Figure 1(b) regeneration: estimated FPU area versus precision
+//! configuration, normalized to FP32/32 — including the paper's headline
+//! "extra 1.5–2.2× area reduction" from narrowing the accumulator of a
+//! reduced-precision multiplier.
+
+use abws::coordinator::experiment::{ExperimentResult, ResultSink};
+use abws::hw::fpu::{FpuAreaModel, FpuConfig};
+use abws::hw::report::{area_rows, render};
+use abws::softfloat::FpFormat;
+use abws::util::json::Json;
+
+fn main() {
+    let model = FpuAreaModel::default();
+    let rows = area_rows(&model, &FpuAreaModel::fig1b_configs());
+    print!("{}", render(&rows));
+
+    let mut result = ExperimentResult::new("fig1b");
+    for r in &rows {
+        result.push_row(&[
+            ("fpu", Json::from(r.name.as_str())),
+            ("area", Json::from(r.area)),
+            ("relative", Json::from(r.relative)),
+            ("reduction", Json::from(r.reduction)),
+        ]);
+    }
+
+    // The paper's quantified claims.
+    let a = |m: FpFormat, acc: FpFormat| model.area(&FpuConfig::new(m, acc));
+    let fp16_acc = FpFormat::new(6, 9);
+    let gain_16 = a(FpFormat::FP8_152, FpFormat::FP32) / a(FpFormat::FP8_152, fp16_acc);
+    let gain_12 = a(FpFormat::FP8_152, FpFormat::FP32) / a(FpFormat::FP8_152, FpFormat::new(6, 5));
+    println!("\nFP8 multiplier, 32b→16b accumulator: {gain_16:.2}x area reduction");
+    println!("FP8 multiplier, 32b→12b accumulator: {gain_12:.2}x area reduction");
+    println!("paper claims an extra 1.5–2.2x from reduced accumulation: {}",
+        if (1.5..=2.2).contains(&gain_16) { "REPRODUCED" } else { "NOT reproduced" });
+    result.note(format!("fp8 acc 32b->16b gain {gain_16:.2}x; ->12b gain {gain_12:.2}x"));
+
+    ResultSink::new("results").unwrap().write(&result).unwrap();
+    println!("wrote results/fig1b.json");
+}

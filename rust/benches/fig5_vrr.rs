@@ -1,0 +1,155 @@
+//! Figure 5 regeneration:
+//! (a) normalized variance lost v(n) vs accumulation length, no chunking,
+//!     m_acc ∈ {8..14};
+//! (b) same with chunk-64 accumulation, m_acc ∈ {6..9};
+//! (c) VRR vs chunk size for several accumulation setups (flat maxima),
+//!     with the no-chunking VRR as the dashed reference.
+//!
+//! v(n) is reported in log space (log v = n(1-VRR); the cut-off is
+//! ln 50 ≈ 3.91) because v itself overflows past the knee.
+
+use abws::coordinator::experiment::{ExperimentResult, ResultSink};
+use abws::coordinator::sweep::run_sweep;
+use abws::util::bench;
+use abws::util::json::Json;
+use abws::vrr::chunking::vrr_chunked_total;
+use abws::vrr::theorem::vrr;
+use abws::vrr::variance_lost::{log_variance_lost, CUTOFF_LN};
+
+fn lengths() -> Vec<usize> {
+    // 2^6 .. 2^22, two points per octave.
+    let mut ns = Vec::new();
+    let mut n = 64usize;
+    while n <= (1 << 22) {
+        ns.push(n);
+        ns.push(n + n / 2);
+        n *= 2;
+    }
+    ns
+}
+
+fn knee(points: &[(usize, f64)]) -> Option<usize> {
+    points.iter().find(|(_, lv)| *lv >= CUTOFF_LN).map(|(n, _)| *n)
+}
+
+fn main() {
+    let mut result = ExperimentResult::new("fig5");
+    let ns = lengths();
+
+    // ---- (a) no chunking --------------------------------------------------
+    println!("Fig 5(a): log v(n), normal accumulation (cut-off ln50 = {CUTOFF_LN:.2})");
+    print!("{:>9}", "n");
+    let maccs_a = [8u32, 9, 10, 11, 12, 13, 14];
+    for m in maccs_a {
+        print!(" {:>9}", format!("m={m}"));
+    }
+    println!();
+    let mut curves_a = Vec::new();
+    for &m in &maccs_a {
+        let pts: Vec<(usize, f64)> = run_sweep(ns.clone(), 8, |&n| {
+            (n, log_variance_lost(vrr(m, 5, n), n))
+        });
+        curves_a.push(pts);
+    }
+    for (i, &n) in ns.iter().enumerate() {
+        print!("{n:>9}");
+        for c in &curves_a {
+            let lv = c[i].1;
+            print!(" {:>9}", if lv > 9999.0 { ">1e4".into() } else { format!("{lv:.2}") });
+        }
+        println!();
+    }
+    for (m, c) in maccs_a.iter().zip(&curves_a) {
+        let k = knee(c);
+        println!("  m_acc={m}: max suitable n ≈ {:?}", k.map(|x| x / 2));
+        result.push_row(&[
+            ("panel", Json::from("a")),
+            ("m_acc", Json::from(*m)),
+            ("knee_n", Json::from(k.unwrap_or(0))),
+        ]);
+    }
+
+    // ---- (b) chunk-64 ------------------------------------------------------
+    println!("\nFig 5(b): log v(n), chunk-64 accumulation");
+    let maccs_b = [6u32, 7, 8, 9];
+    print!("{:>9}", "n");
+    for m in maccs_b {
+        print!(" {:>9}", format!("m={m}"));
+    }
+    println!();
+    let mut curves_b = Vec::new();
+    for &m in &maccs_b {
+        let pts: Vec<(usize, f64)> = run_sweep(ns.clone(), 8, |&n| {
+            (n, log_variance_lost(vrr_chunked_total(m, 5, n, 64), n))
+        });
+        curves_b.push(pts);
+    }
+    for (i, &n) in ns.iter().enumerate() {
+        print!("{n:>9}");
+        for c in &curves_b {
+            let lv = c[i].1;
+            print!(" {:>9}", if lv > 9999.0 { ">1e4".into() } else { format!("{lv:.2}") });
+        }
+        println!();
+    }
+    for (m, c) in maccs_b.iter().zip(&curves_b) {
+        let k = knee(c);
+        println!("  m_acc={m} (chunked): knee ≈ {k:?}");
+        result.push_row(&[
+            ("panel", Json::from("b")),
+            ("m_acc", Json::from(*m)),
+            ("knee_n", Json::from(k.unwrap_or(0))),
+        ]);
+    }
+
+    // Cross-panel check (the chunking benefit): for the same m_acc, the
+    // chunked knee sits at larger n.
+    for &m in &[8u32, 9] {
+        let ka = knee(&curves_a[maccs_a.iter().position(|&x| x == m).unwrap()]);
+        let kb = knee(&curves_b[maccs_b.iter().position(|&x| x == m).unwrap()]);
+        if let (Some(ka), Some(kb)) = (ka, kb) {
+            println!("  m_acc={m}: knee moves {ka} → {kb} with chunking ({}x)", kb / ka.max(1));
+        }
+    }
+
+    // ---- (c) VRR vs chunk size ---------------------------------------------
+    println!("\nFig 5(c): VRR vs chunk size (dashed = no chunking)");
+    let setups = [(1usize << 16, 8u32), (1 << 18, 9), (1 << 20, 10)];
+    for (n, m) in setups {
+        let mut chunks = Vec::new();
+        let mut c = 2usize;
+        while c <= n / 2 {
+            chunks.push(c);
+            c *= 2;
+        }
+        let vals = run_sweep(chunks.clone(), 8, |&c| vrr_chunked_total(m, 5, n, c));
+        let plain = vrr(m, 5, n);
+        println!("  n=2^{} m_acc={m}: plain VRR {plain:.4}", n.trailing_zeros());
+        for (c, v) in chunks.iter().zip(&vals) {
+            println!("    chunk {c:>7}: VRR {v:.5}");
+        }
+        // Flat maximum: best VRR region spans ≥ 4 octaves within 1%.
+        let best = vals.iter().cloned().fold(0.0, f64::max);
+        let flat = vals.iter().filter(|&&v| v > best - 0.01).count();
+        println!("    flat-top width: {flat} octaves (≥4 expected)");
+        result.push_row(&[
+            ("panel", Json::from("c")),
+            ("n", Json::from(n)),
+            ("m_acc", Json::from(m)),
+            ("plain_vrr", Json::from(plain)),
+            ("best_vrr", Json::from(best)),
+            ("flat_octaves", Json::from(flat)),
+        ]);
+    }
+
+    // Timing of a full panel-(a) sweep.
+    bench::header();
+    bench::quick("fig5a_single_curve_m10", || {
+        for &n in &[1usize << 12, 1 << 16, 1 << 20] {
+            std::hint::black_box(vrr(10, 5, n));
+        }
+    });
+
+    ResultSink::new("results").unwrap().write(&result).unwrap();
+    println!("wrote results/fig5.json");
+}

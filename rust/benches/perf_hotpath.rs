@@ -1,0 +1,81 @@
+//! Hot-path micro-benchmarks for the §Perf optimization loop:
+//! * `vrr` formula evaluation (the solver's inner call — O(n) erfc loop);
+//! * the solver (binary search over `vrr`);
+//! * softfloat quantize + sequential/chunked accumulation;
+//! * reduced-precision GEMM (the native trainer's inner loop);
+//! * a full Monte-Carlo VRR point.
+//!
+//! Run before/after each optimization; EXPERIMENTS.md §Perf records the
+//! iteration log.
+
+use std::time::Duration;
+
+use abws::mc::{empirical_vrr, McConfig};
+use abws::softfloat::accumulate::{chunked_sum, sequential_sum};
+use abws::softfloat::format::FpFormat;
+use abws::softfloat::gemm::{rp_gemm, rp_gemm_mxu, GemmConfig};
+use abws::softfloat::quant::{quantize, Rounding};
+use abws::softfloat::tensor::Tensor;
+use abws::util::bench::{bench, header};
+use abws::util::rng::Pcg64;
+use abws::vrr::solver::{min_m_acc, AccumSpec};
+use abws::vrr::theorem::vrr;
+
+fn main() {
+    header();
+    let budget = Duration::from_millis(700);
+
+    // --- VRR formula -------------------------------------------------------
+    for log_n in [12u32, 16, 20] {
+        let n = 1usize << log_n;
+        bench(&format!("vrr(m=10, n=2^{log_n})"), budget, || {
+            std::hint::black_box(vrr(10, 5, n))
+        });
+    }
+    bench("min_m_acc(n=2^20, plain)", budget, || {
+        std::hint::black_box(min_m_acc(&AccumSpec::plain(1 << 20)))
+    });
+    bench("min_m_acc(n=2^20, chunk64)", budget, || {
+        std::hint::black_box(min_m_acc(&AccumSpec::plain(1 << 20).with_chunk(64)))
+    });
+
+    // --- softfloat primitives ------------------------------------------------
+    let mut rng = Pcg64::seeded(1);
+    let terms: Vec<f64> = (0..65_536).map(|_| rng.normal()).collect();
+    let fmt = FpFormat::accumulator(10);
+    bench("quantize x 64k", budget, || {
+        let mut acc = 0.0;
+        for &t in &terms {
+            acc += quantize(t, fmt, Rounding::NearestEven);
+        }
+        acc
+    });
+    bench("sequential_sum 64k @ m=10", budget, || {
+        sequential_sum(&terms, fmt, Rounding::NearestEven)
+    });
+    bench("chunked_sum 64k @ m=10 c=64", budget, || {
+        chunked_sum(&terms, 64, fmt, Rounding::NearestEven)
+    });
+
+    // --- reduced-precision GEMM ----------------------------------------------
+    let a = Tensor::randn(&[16, 1024], 1.0, &mut rng);
+    let b = Tensor::randn(&[1024, 16], 1.0, &mut rng);
+    let cfg = GemmConfig::paper(10, None);
+    bench("rp_gemm 16x1024x16 seq", budget, || {
+        std::hint::black_box(rp_gemm(&a, &b, &cfg))
+    });
+    let cfg_c = GemmConfig::paper(10, Some(64));
+    bench("rp_gemm 16x1024x16 chunk64", budget, || {
+        std::hint::black_box(rp_gemm(&a, &b, &cfg_c))
+    });
+    bench("rp_gemm_mxu 16x1024x16 c=64", budget, || {
+        std::hint::black_box(rp_gemm_mxu(&a, &b, &cfg_c, 64))
+    });
+
+    // --- Monte-Carlo point -----------------------------------------------------
+    let mut mc = McConfig::new(16_384, 8).with_trials(32);
+    mc.threads = 4;
+    bench("empirical_vrr n=16k t=32", Duration::from_secs(2), || {
+        std::hint::black_box(empirical_vrr(&mc))
+    });
+}

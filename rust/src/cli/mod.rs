@@ -1,0 +1,255 @@
+//! The `abws` command-line interface.
+//!
+//! ```text
+//! abws predict [--net all|resnet32|resnet18|alexnet] [--chunk 64] [--mp 5]
+//! abws vrr --macc 12 --n 4096 [--mp 5] [--chunk 64] [--nzr 0.5]
+//! abws area
+//! abws mc [--n 16384] [--maccs 5,6,8] [--trials 256] [--chunk 64]
+//! abws train [--mode native|aot] [--macc 12 | --pp -1] [--chunk 64]
+//!            [--steps 300] [--dim 256] [--hidden 64] [--seed 42]
+//! abws list
+//! abws info
+//! ```
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::registry;
+use crate::data::synth::{generate, SynthSpec};
+use crate::hw::fpu::{FpuAreaModel, FpuConfig};
+use crate::hw::report;
+use crate::mc::validate;
+use crate::nets::nzr::NzrModel;
+use crate::nets::predict::predict_network;
+use crate::nets::{alexnet, resnet};
+use crate::trainer::native::{NativeTrainer, PrecisionPlan, TrainConfig};
+use crate::util::argparse::Args;
+use crate::vrr;
+
+/// Entry point used by `main.rs`; returns the process exit code.
+pub fn run(args: Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("predict") => cmd_predict(&args),
+        Some("vrr") => cmd_vrr(&args),
+        Some("area") => cmd_area(),
+        Some("mc") => cmd_mc(&args),
+        Some("train") => cmd_train(&args),
+        Some("list") => {
+            print!("{}", registry::render_catalog());
+            Ok(())
+        }
+        Some("info") => cmd_info(),
+        Some(other) => bail!("unknown command '{other}'\n{}", USAGE),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "usage: abws <predict|vrr|area|mc|train|list|info> [options]
+  predict  — Table 1: per-layer-group accumulation precision predictions
+  vrr      — evaluate VRR / v(n) for one accumulation setup
+  area     — Fig 1b: FPU area model ladder
+  mc       — Monte-Carlo validation of the VRR formulas
+  train    — reduced-precision training run (native bit-accurate or AOT/PJRT)
+  list     — catalog of reproducible experiments
+  info     — PJRT runtime info";
+
+fn networks_for(name: &str) -> Result<Vec<(crate::nets::Network, NzrModel)>> {
+    Ok(match name {
+        "resnet32" => vec![(resnet::resnet32_cifar10(), NzrModel::resnet_default())],
+        "resnet18" => vec![(resnet::resnet18_imagenet(), NzrModel::resnet_default())],
+        "alexnet" => vec![(alexnet::alexnet_imagenet(), NzrModel::alexnet_default())],
+        "all" => vec![
+            (resnet::resnet32_cifar10(), NzrModel::resnet_default()),
+            (resnet::resnet18_imagenet(), NzrModel::resnet_default()),
+            (alexnet::alexnet_imagenet(), NzrModel::alexnet_default()),
+        ],
+        other => bail!("unknown network '{other}' (resnet32|resnet18|alexnet|all)"),
+    })
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let m_p = args.get_u32("mp", 5);
+    let chunk = args.get_usize("chunk", 64);
+    for (net, nzr) in networks_for(args.get_or("net", "all"))? {
+        let pred = predict_network(&net, &nzr, m_p, chunk);
+        println!("{}", pred.render());
+        if args.flag("detail") {
+            for lp in &pred.layers {
+                println!(
+                    "  {:<12} {:<12} fwd n={:<8} bwd n={:<8} grad n={:<8}",
+                    lp.layer, lp.group, lp.lengths.fwd, lp.lengths.bwd, lp.lengths.grad
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_vrr(args: &Args) -> Result<()> {
+    let m_acc = args.get_u32("macc", 12);
+    let m_p = args.get_u32("mp", 5);
+    let n = args.get_usize("n", 4096);
+    let nzr = args.get_f64("nzr", 1.0);
+    let spec = crate::vrr::solver::AccumSpec {
+        n,
+        m_p,
+        nzr,
+        chunk: args.get("chunk").map(|c| c.parse().unwrap()),
+    };
+    let v = spec.vrr(m_acc);
+    let log_v = vrr::variance_lost::log_variance_lost(v, spec.n_eff());
+    println!("VRR(m_acc={m_acc}, m_p={m_p}, n={n}, nzr={nzr}, chunk={:?}) = {v:.6}", spec.chunk);
+    println!("log v(n) = {log_v:.3} (cutoff ln 50 = {:.3})", vrr::CUTOFF_LN);
+    println!(
+        "suitable: {}; minimum m_acc for this accumulation: {}",
+        spec.suitable(m_acc),
+        vrr::solver::min_m_acc(&spec)
+    );
+    Ok(())
+}
+
+fn cmd_area() -> Result<()> {
+    let model = FpuAreaModel::default();
+    let rows = report::area_rows(&model, &FpuAreaModel::fig1b_configs());
+    print!("{}", report::render(&rows));
+    let fp8_32 = model.area(&FpuConfig::new(
+        crate::softfloat::FpFormat::FP8_152,
+        crate::softfloat::FpFormat::FP32,
+    ));
+    let fp8_16 = model.area(&FpuConfig::new(
+        crate::softfloat::FpFormat::FP8_152,
+        crate::softfloat::FpFormat::new(6, 9),
+    ));
+    println!(
+        "narrow-accumulator gain (FP8/32 -> FP8/16): {:.2}x",
+        fp8_32 / fp8_16
+    );
+    Ok(())
+}
+
+fn cmd_mc(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 16_384);
+    let maccs = args.get_u32_list("maccs", &[5, 6, 8, 10]);
+    let trials = args.get_usize("trials", 256);
+    let chunk = args.get("chunk").map(|c| c.parse().unwrap());
+    let seed = args.get_i64("seed", 0x5eed) as u64;
+    let pts = validate::validate_grid(&maccs, &[n], chunk, trials, seed);
+    print!("{}", validate::render(&pts));
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let dim = args.get_usize("dim", 256);
+    let steps = args.get_usize("steps", 300);
+    let chunk = args.get("chunk").map(|c| c.parse().unwrap());
+    let classes = 10;
+    let spec = SynthSpec {
+        dim,
+        classes,
+        seed: args.get_i64("data-seed", 1234) as u64,
+        ..Default::default()
+    };
+
+    let cfg = TrainConfig {
+        hidden: args.get_usize("hidden", 64),
+        steps,
+        batch: args.get_usize("batch", 32),
+        seed: args.get_i64("seed", 42) as u64,
+        ..Default::default()
+    };
+
+    // Precision plan: explicit --macc, or the solver's prediction (+ --pp).
+    let plan = if let Some(m) = args.get("macc") {
+        PrecisionPlan::uniform(m.parse()?, chunk)
+    } else {
+        let pp = args.get_i64("pp", 0) as i32;
+        let spec_fwd = crate::vrr::solver::AccumSpec {
+            n: dim,
+            m_p: 5,
+            nzr: 1.0,
+            chunk,
+        };
+        let spec_bwd = crate::vrr::solver::AccumSpec {
+            n: classes,
+            m_p: 5,
+            nzr: 0.5,
+            chunk,
+        };
+        let spec_grad = crate::vrr::solver::AccumSpec {
+            n: cfg.batch,
+            m_p: 5,
+            nzr: 0.5,
+            chunk,
+        };
+        let plan = PrecisionPlan::per_gemm(
+            crate::vrr::solver::perturbed(crate::vrr::solver::min_m_acc(&spec_fwd), pp),
+            crate::vrr::solver::perturbed(crate::vrr::solver::min_m_acc(&spec_bwd), pp),
+            crate::vrr::solver::perturbed(crate::vrr::solver::min_m_acc(&spec_grad), pp),
+            chunk,
+        );
+        println!(
+            "predicted m_acc (pp={pp}): fwd={} bwd={} grad={}",
+            plan.fwd.acc.man_bits, plan.bwd.acc.man_bits, plan.grad.acc.man_bits
+        );
+        plan
+    };
+
+    match args.get_or("mode", "native") {
+        "native" => {
+            let (train, test) = generate(&spec);
+            let mut t = NativeTrainer::new(dim, classes, plan, cfg);
+            let m = t.train(&train);
+            let test_acc = t.evaluate(&test);
+            report_run(&m, test_acc, steps);
+        }
+        "aot" => {
+            let store =
+                crate::runtime::ArtifactStore::open(args.get_or("artifacts", "artifacts"))?;
+            store.verify()?;
+            let rt = crate::runtime::Runtime::cpu()?;
+            let variant = args.get_or("variant", "baseline").to_string();
+            let mut exec =
+                crate::runtime::TrainStepExecutor::new(&rt, &store, &variant, cfg.seed)?;
+            let d = exec.dims;
+            let (train, test) = generate(&SynthSpec {
+                dim: d.dim,
+                classes: d.classes,
+                ..spec
+            });
+            let m = exec.train(&train, steps)?;
+            // Evaluate with the native forward on the trained params.
+            let (w1, w2) = exec.params()?;
+            let mut nt = NativeTrainer::new(d.dim, d.classes, PrecisionPlan::baseline(), cfg);
+            nt.w1 = w1;
+            nt.w2 = w2;
+            let test_acc = nt.evaluate(&test);
+            report_run(&m, test_acc, steps);
+        }
+        other => bail!("unknown mode '{other}' (native|aot)"),
+    }
+    Ok(())
+}
+
+fn report_run(m: &crate::trainer::RunMetrics, test_acc: f64, steps: usize) {
+    for r in m.steps.iter().step_by((steps / 20).max(1)) {
+        println!(
+            "step {:>5}  loss {:>9.4}  train-acc {:>6.3}",
+            r.step, r.loss, r.train_acc
+        );
+    }
+    if let Some(r) = m.steps.last() {
+        println!(
+            "final     loss {:>9.4}  train-acc {:>6.3}",
+            r.loss, r.train_acc
+        );
+    }
+    println!("test-acc {test_acc:.4}  diverged: {}", m.diverged);
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = crate::runtime::Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    Ok(())
+}

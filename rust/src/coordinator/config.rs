@@ -1,0 +1,122 @@
+//! Experiment configuration: a flat typed key-value config with file
+//! loading (JSON), CLI overrides (`--set key=value`) and defaults —
+//! the offline stand-in for a serde-based config system.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// A flat configuration map with typed getters.
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentConfig {
+    values: BTreeMap<String, Json>,
+}
+
+impl ExperimentConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Load from a JSON file of scalars.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing config JSON")?;
+        let Json::Obj(map) = j else {
+            bail!("config root must be an object");
+        };
+        Ok(ExperimentConfig {
+            values: map.into_iter().collect(),
+        })
+    }
+
+    /// Apply a `key=value` override (numbers and bools are auto-typed).
+    pub fn set_kv(&mut self, kv: &str) -> Result<()> {
+        let Some((k, v)) = kv.split_once('=') else {
+            bail!("override '{kv}' is not key=value");
+        };
+        let val = if let Ok(n) = v.parse::<f64>() {
+            Json::Num(n)
+        } else if v == "true" || v == "false" {
+            Json::Bool(v == "true")
+        } else {
+            Json::Str(v.to_string())
+        };
+        self.values.insert(k.to_string(), val);
+        Ok(())
+    }
+
+    pub fn set(&mut self, key: &str, val: impl Into<Json>) -> &mut Self {
+        self.values.insert(key.to_string(), val.into());
+        self
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.values
+            .get(key)
+            .and_then(Json::as_f64)
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get_f64(key, default as f64) as usize
+    }
+
+    pub fn get_u32(&self, key: &str, default: u32) -> u32 {
+        self.get_f64(key, default as f64) as u32
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.values
+            .get(key)
+            .and_then(Json::as_bool)
+            .unwrap_or(default)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.values
+            .get(key)
+            .and_then(Json::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(self.values.clone().into_iter().collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overrides_and_types() {
+        let mut c = ExperimentConfig::new();
+        c.set_kv("steps=300").unwrap();
+        c.set_kv("lr=0.05").unwrap();
+        c.set_kv("chunked=true").unwrap();
+        c.set_kv("net=resnet18").unwrap();
+        assert_eq!(c.get_usize("steps", 0), 300);
+        assert_eq!(c.get_f64("lr", 0.0), 0.05);
+        assert!(c.get_bool("chunked", false));
+        assert_eq!(c.get_str("net", ""), "resnet18");
+        assert_eq!(c.get_usize("missing", 7), 7);
+        assert!(c.set_kv("malformed").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("abws_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        let mut c = ExperimentConfig::new();
+        c.set("alpha", 1.5).set("name", "x");
+        std::fs::write(&path, c.to_json().to_string()).unwrap();
+        let back = ExperimentConfig::from_file(&path).unwrap();
+        assert_eq!(back.get_f64("alpha", 0.0), 1.5);
+        assert_eq!(back.get_str("name", ""), "x");
+    }
+}

@@ -1,0 +1,159 @@
+//! Experiment results and sinks: every harness produces an
+//! [`ExperimentResult`] (id + config + rows of named scalars) that can be
+//! rendered as a table, CSV, or JSON and written under `results/`.
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// One row of an experiment's output table (ordered key → value).
+pub type Row = BTreeMap<String, Json>;
+
+/// The output of one experiment run.
+#[derive(Clone, Debug)]
+pub struct ExperimentResult {
+    /// Experiment id, e.g. `"table1"`, `"fig5a"`.
+    pub id: String,
+    pub config: Json,
+    pub rows: Vec<Row>,
+    /// Free-form notes (e.g. paper-vs-measured commentary).
+    pub notes: Vec<String>,
+}
+
+impl ExperimentResult {
+    pub fn new(id: &str) -> ExperimentResult {
+        ExperimentResult {
+            id: id.to_string(),
+            config: Json::obj(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, pairs: &[(&str, Json)]) {
+        let mut row = Row::new();
+        for (k, v) in pairs {
+            row.insert(k.to_string(), v.clone());
+        }
+        self.rows.push(row);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("id", self.id.as_str());
+        j.set("config", self.config.clone());
+        j.set(
+            "rows",
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| Json::Obj(r.clone().into_iter().collect()))
+                    .collect(),
+            ),
+        );
+        j.set(
+            "notes",
+            Json::Arr(self.notes.iter().map(|n| Json::from(n.as_str())).collect()),
+        );
+        j
+    }
+
+    /// CSV with the union of row keys as header.
+    pub fn to_csv(&self) -> String {
+        let mut keys: Vec<String> = Vec::new();
+        for r in &self.rows {
+            for k in r.keys() {
+                if !keys.contains(k) {
+                    keys.push(k.clone());
+                }
+            }
+        }
+        let mut out = keys.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            let cells: Vec<String> = keys
+                .iter()
+                .map(|k| match r.get(k) {
+                    Some(Json::Str(s)) => s.clone(),
+                    Some(v) => v.to_string(),
+                    None => String::new(),
+                })
+                .collect();
+            out.push_str(&cells.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Writes results under a directory as both JSON and CSV.
+pub struct ResultSink {
+    pub dir: std::path::PathBuf,
+}
+
+impl ResultSink {
+    pub fn new(dir: impl AsRef<Path>) -> Result<ResultSink> {
+        std::fs::create_dir_all(dir.as_ref())
+            .with_context(|| format!("creating {}", dir.as_ref().display()))?;
+        Ok(ResultSink {
+            dir: dir.as_ref().to_path_buf(),
+        })
+    }
+
+    pub fn write(&self, result: &ExperimentResult) -> Result<()> {
+        std::fs::write(
+            self.dir.join(format!("{}.json", result.id)),
+            result.to_json().to_string(),
+        )?;
+        std::fs::write(
+            self.dir.join(format!("{}.csv", result.id)),
+            result.to_csv(),
+        )?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_csv_json() {
+        let mut r = ExperimentResult::new("t");
+        r.push_row(&[("n", Json::from(64.0)), ("vrr", Json::from(0.99))]);
+        r.push_row(&[("n", Json::from(128.0)), ("vrr", Json::from(0.95))]);
+        r.note("hello");
+        let csv = r.to_csv();
+        assert!(csv.starts_with("n,vrr"));
+        assert!(csv.contains("128,0.95"));
+        let j = r.to_json();
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn sink_writes_files() {
+        let dir = std::env::temp_dir().join("abws_sink_test");
+        let sink = ResultSink::new(&dir).unwrap();
+        let mut r = ExperimentResult::new("unit");
+        r.push_row(&[("x", Json::from(1.0))]);
+        sink.write(&r).unwrap();
+        assert!(dir.join("unit.json").exists());
+        assert!(dir.join("unit.csv").exists());
+    }
+
+    #[test]
+    fn csv_handles_ragged_rows() {
+        let mut r = ExperimentResult::new("t");
+        r.push_row(&[("a", Json::from(1.0))]);
+        r.push_row(&[("b", Json::from(2.0))]);
+        let csv = r.to_csv();
+        assert!(csv.starts_with("a,b"));
+        assert!(csv.contains("1,\n") || csv.contains("1,"));
+    }
+}

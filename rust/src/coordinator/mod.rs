@@ -1,0 +1,13 @@
+//! Experiment coordination: typed configs, a registry of named
+//! experiments (one per paper table/figure), a thread-pooled sweep
+//! runner, and JSON/CSV result sinks. The `cargo bench` targets and the
+//! CLI are thin drivers over this module.
+
+pub mod config;
+pub mod experiment;
+pub mod registry;
+pub mod sweep;
+
+pub use config::ExperimentConfig;
+pub use experiment::{ExperimentResult, ResultSink};
+pub use sweep::{run_sweep, SweepPoint};

@@ -1,0 +1,124 @@
+//! Catalog of the paper's experiments: stable ids, descriptions, and the
+//! command that regenerates each (DESIGN.md §3's per-experiment index,
+//! machine-readable).
+
+/// Static descriptor of one reproducible experiment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExperimentInfo {
+    pub id: &'static str,
+    pub paper_artifact: &'static str,
+    pub description: &'static str,
+    pub command: &'static str,
+}
+
+/// All experiments, in paper order.
+pub const EXPERIMENTS: &[ExperimentInfo] = &[
+    ExperimentInfo {
+        id: "table1",
+        paper_artifact: "Table 1",
+        description: "Predicted (normal, chunked) accumulation mantissa widths per layer group and GEMM for ResNet-32/CIFAR-10, ResNet-18/ImageNet, AlexNet/ImageNet",
+        command: "cargo bench --bench table1 (or: abws predict --net all)",
+    },
+    ExperimentInfo {
+        id: "fig1a",
+        paper_artifact: "Figure 1(a)",
+        description: "Divergence of training when the accumulation precision is reduced naively (scaled-down bit-accurate run)",
+        command: "cargo bench --bench fig1a_divergence",
+    },
+    ExperimentInfo {
+        id: "fig1b",
+        paper_artifact: "Figure 1(b)",
+        description: "Estimated FPU area vs multiplier/accumulator precision; the extra 1.5-2.2x from narrow accumulation",
+        command: "cargo bench --bench fig1b_area (or: abws area)",
+    },
+    ExperimentInfo {
+        id: "fig3",
+        paper_artifact: "Figure 3",
+        description: "Weight-gradient variance vs layer index: baseline vs reduced-precision GRAD accumulation",
+        command: "cargo bench --bench fig3_variance",
+    },
+    ExperimentInfo {
+        id: "fig5a",
+        paper_artifact: "Figure 5(a)",
+        description: "Normalized variance lost v(n) vs accumulation length, no chunking, m_acc sweep",
+        command: "cargo bench --bench fig5_vrr (or: abws vrr --sweep)",
+    },
+    ExperimentInfo {
+        id: "fig5b",
+        paper_artifact: "Figure 5(b)",
+        description: "v(n) vs accumulation length with chunk-64 accumulation",
+        command: "cargo bench --bench fig5_vrr",
+    },
+    ExperimentInfo {
+        id: "fig5c",
+        paper_artifact: "Figure 5(c)",
+        description: "VRR vs chunk size for several accumulation setups (flat maxima)",
+        command: "cargo bench --bench fig5_vrr",
+    },
+    ExperimentInfo {
+        id: "fig6",
+        paper_artifact: "Figure 6(a-c)",
+        description: "Convergence curves at the predicted precision and under precision perturbation (PP), normal and chunked",
+        command: "cargo bench --bench fig6_convergence (or: abws train)",
+    },
+    ExperimentInfo {
+        id: "fig6d",
+        paper_artifact: "Figure 6(d)",
+        description: "Final accuracy degradation vs precision perturbation",
+        command: "cargo bench --bench fig6_convergence",
+    },
+    ExperimentInfo {
+        id: "mc",
+        paper_artifact: "(validation)",
+        description: "Monte-Carlo empirical VRR vs Theorem 1/Corollary 1 over an (m_acc, n) grid",
+        command: "abws mc",
+    },
+];
+
+/// Look up an experiment by id.
+pub fn find(id: &str) -> Option<&'static ExperimentInfo> {
+    EXPERIMENTS.iter().find(|e| e.id == id)
+}
+
+/// Render the catalog as a text table.
+pub fn render_catalog() -> String {
+    let mut out = String::new();
+    for e in EXPERIMENTS {
+        out.push_str(&format!(
+            "{:<8} {:<14} {}\n{:<8} {:<14} -> {}\n",
+            e.id, e.paper_artifact, e.description, "", "", e.command
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_table_and_figure() {
+        // The paper's evaluation artifacts: Table 1, Fig 1a/1b, Fig 3,
+        // Fig 5a/5b/5c, Fig 6a-c/6d.
+        for id in [
+            "table1", "fig1a", "fig1b", "fig3", "fig5a", "fig5b", "fig5c", "fig6", "fig6d",
+        ] {
+            assert!(find(id).is_some(), "missing experiment {id}");
+        }
+    }
+
+    #[test]
+    fn ids_unique() {
+        let mut ids: Vec<&str> = EXPERIMENTS.iter().map(|e| e.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), EXPERIMENTS.len());
+    }
+
+    #[test]
+    fn catalog_renders() {
+        let text = render_catalog();
+        assert!(text.contains("Table 1"));
+        assert!(text.contains("cargo bench"));
+    }
+}

@@ -1,0 +1,112 @@
+//! Thread-pooled parameter sweeps: run a closure over a grid of points
+//! with bounded parallelism (std::thread::scope — no rayon offline) while
+//! preserving input order in the output.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::thread;
+
+/// One point of a sweep with its index in the grid.
+#[derive(Clone, Debug)]
+pub struct SweepPoint<P> {
+    pub index: usize,
+    pub params: P,
+}
+
+/// Run `f` over `points` with up to `threads` workers; results come back
+/// in input order. Panics in workers are propagated.
+pub fn run_sweep<P, R, F>(points: Vec<P>, threads: usize, f: F) -> Vec<R>
+where
+    P: Send + Sync,
+    R: Send,
+    F: Fn(&P) -> R + Sync,
+{
+    let n = points.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let points_ref = &points;
+    let f_ref = &f;
+    let next_ref = &next;
+    let slots_ref = &slots;
+
+    thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(move || loop {
+                let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f_ref(&points_ref[i]);
+                *slots_ref[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker skipped a point"))
+        .collect()
+}
+
+/// Cartesian product of two parameter lists.
+pub fn grid2<A: Clone, B: Clone>(a: &[A], b: &[B]) -> Vec<(A, B)> {
+    let mut out = Vec::with_capacity(a.len() * b.len());
+    for x in a {
+        for y in b {
+            out.push((x.clone(), y.clone()));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let points: Vec<usize> = (0..100).collect();
+        let out = run_sweep(points, 8, |&p| p * 2);
+        assert_eq!(out, (0..100).map(|p| p * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_and_empty() {
+        assert_eq!(run_sweep(vec![1, 2, 3], 1, |&p| p + 1), vec![2, 3, 4]);
+        let empty: Vec<i32> = run_sweep(Vec::<i32>::new(), 4, |&p| p);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_points() {
+        assert_eq!(run_sweep(vec![5], 64, |&p| p), vec![5]);
+    }
+
+    #[test]
+    fn grid_product() {
+        let g = grid2(&[1, 2], &["a", "b", "c"]);
+        assert_eq!(g.len(), 6);
+        assert_eq!(g[0], (1, "a"));
+        assert_eq!(g[5], (2, "c"));
+    }
+
+    #[test]
+    fn actually_parallel() {
+        // All workers must participate: with 4 threads and sleeping work,
+        // wall time should be well under serial time.
+        use std::time::{Duration, Instant};
+        let t = Instant::now();
+        let _ = run_sweep((0..8).collect::<Vec<_>>(), 4, |_| {
+            thread::sleep(Duration::from_millis(30))
+        });
+        let elapsed = t.elapsed();
+        assert!(
+            elapsed < Duration::from_millis(8 * 30),
+            "elapsed {elapsed:?}"
+        );
+    }
+}

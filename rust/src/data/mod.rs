@@ -1,0 +1,7 @@
+//! Synthetic datasets (see DESIGN.md §5: ImageNet/CIFAR are not available
+//! in this environment; the VRR theory depends on operand statistics, not
+//! image content).
+
+pub mod synth;
+
+pub use synth::{Dataset, SynthSpec};

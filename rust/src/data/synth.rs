@@ -1,0 +1,211 @@
+//! Class-conditional Gaussian-mixture classification data.
+//!
+//! Each class `c` gets a random unit-ish mean vector `μ_c`; samples are
+//! `x = μ_c + σ·z`, `z ~ N(0, I)`. The task difficulty is controlled by
+//! the noise-to-separation ratio, chosen so a small MLP reaches high
+//! accuracy in a few hundred steps at full precision — giving reduced-
+//! precision degradation room to show (paper Fig. 6's 0.5% band).
+
+use crate::softfloat::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// Specification of a synthetic classification dataset.
+#[derive(Clone, Copy, Debug)]
+pub struct SynthSpec {
+    pub n_train: usize,
+    pub n_test: usize,
+    /// Input dimensionality (the FWD accumulation length of layer 1).
+    pub dim: usize,
+    pub classes: usize,
+    /// Within-class noise σ (means have norm ≈ 1).
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl Default for SynthSpec {
+    fn default() -> Self {
+        SynthSpec {
+            n_train: 2048,
+            n_test: 512,
+            dim: 256,
+            classes: 10,
+            noise: 1.0,
+            seed: 1234,
+        }
+    }
+}
+
+/// An in-memory dataset of feature rows and integer labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// `[n, dim]`.
+    pub x: Tensor,
+    pub y: Vec<usize>,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Copy out mini-batch `idx` of size `bs` (wraps around).
+    pub fn batch(&self, step: usize, bs: usize) -> (Tensor, Vec<usize>) {
+        let n = self.len();
+        let dim = self.x.shape[1];
+        let mut xb = Tensor::zeros(&[bs, dim]);
+        let mut yb = Vec::with_capacity(bs);
+        for i in 0..bs {
+            let j = (step * bs + i) % n;
+            xb.data[i * dim..(i + 1) * dim]
+                .copy_from_slice(&self.x.data[j * dim..(j + 1) * dim]);
+            yb.push(self.y[j]);
+        }
+        (xb, yb)
+    }
+}
+
+/// Generate a `(train, test)` pair from a spec.
+pub fn generate(spec: &SynthSpec) -> (Dataset, Dataset) {
+    let mut rng = Pcg64::seeded(spec.seed);
+    // Class means: random Gaussian directions, normalized to unit norm.
+    let mut means = vec![vec![0.0f64; spec.dim]; spec.classes];
+    for m in means.iter_mut() {
+        let mut norm = 0.0;
+        for v in m.iter_mut() {
+            *v = rng.normal();
+            norm += *v * *v;
+        }
+        let norm = norm.sqrt().max(1e-9);
+        for v in m.iter_mut() {
+            *v /= norm;
+        }
+    }
+
+    let make = |count: usize, rng: &mut Pcg64| -> Dataset {
+        let mut x = Tensor::zeros(&[count, spec.dim]);
+        let mut y = Vec::with_capacity(count);
+        for i in 0..count {
+            let c = rng.next_below(spec.classes as u64) as usize;
+            y.push(c);
+            for d in 0..spec.dim {
+                // Scale by 1/sqrt(dim) so feature variance ~ O(1/dim) and
+                // dot products stay O(1) — matching He-init statistics.
+                let v = means[c][d] + spec.noise * rng.normal() / (spec.dim as f64).sqrt();
+                x.data[i * spec.dim + d] = v as f32;
+            }
+        }
+        Dataset {
+            x,
+            y,
+            classes: spec.classes,
+        }
+    };
+
+    let train = make(spec.n_train, &mut rng);
+    let test = make(spec.n_test, &mut rng);
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_labels() {
+        let spec = SynthSpec {
+            n_train: 100,
+            n_test: 40,
+            dim: 32,
+            classes: 4,
+            ..Default::default()
+        };
+        let (tr, te) = generate(&spec);
+        assert_eq!(tr.x.shape, vec![100, 32]);
+        assert_eq!(te.len(), 40);
+        assert!(tr.y.iter().all(|&c| c < 4));
+        // All classes appear.
+        for c in 0..4 {
+            assert!(tr.y.iter().any(|&y| y == c));
+        }
+    }
+
+    #[test]
+    fn batches_wrap_around() {
+        let spec = SynthSpec {
+            n_train: 10,
+            n_test: 4,
+            dim: 8,
+            classes: 2,
+            ..Default::default()
+        };
+        let (tr, _) = generate(&spec);
+        let (xb, yb) = tr.batch(3, 4); // indices 12..16 → wrap to 2..6
+        assert_eq!(xb.shape, vec![4, 8]);
+        assert_eq!(yb.len(), 4);
+        assert_eq!(yb[0], tr.y[12 % 10]);
+    }
+
+    #[test]
+    fn deterministic() {
+        let spec = SynthSpec::default();
+        let (a, _) = generate(&spec);
+        let (b, _) = generate(&spec);
+        assert_eq!(a.x.data, b.x.data);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // Nearest-mean classification on the training set should beat
+        // chance by a wide margin — otherwise the trainer can't converge.
+        let spec = SynthSpec {
+            n_train: 400,
+            n_test: 0,
+            dim: 64,
+            classes: 4,
+            noise: 1.0,
+            seed: 7,
+        };
+        let (tr, _) = generate(&spec);
+        // Estimate class means from data.
+        let mut means = vec![vec![0.0f64; spec.dim]; spec.classes];
+        let mut counts = vec![0usize; spec.classes];
+        for i in 0..tr.len() {
+            let c = tr.y[i];
+            counts[c] += 1;
+            for d in 0..spec.dim {
+                means[c][d] += tr.x.data[i * spec.dim + d] as f64;
+            }
+        }
+        for c in 0..spec.classes {
+            for d in 0..spec.dim {
+                means[c][d] /= counts[c].max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..tr.len() {
+            let mut best = (f64::INFINITY, 0);
+            for c in 0..spec.classes {
+                let d2: f64 = (0..spec.dim)
+                    .map(|d| {
+                        let diff = tr.x.data[i * spec.dim + d] as f64 - means[c][d];
+                        diff * diff
+                    })
+                    .sum();
+                if d2 < best.0 {
+                    best = (d2, c);
+                }
+            }
+            if best.1 == tr.y[i] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / tr.len() as f64;
+        assert!(acc > 0.8, "nearest-mean accuracy {acc}");
+    }
+}

@@ -1,0 +1,186 @@
+//! Parametric FPU area model (paper Fig. 1b).
+//!
+//! The paper's figure comes from "a model underpinned by the hardware
+//! synthesis of low-precision floating-point units". We reproduce the
+//! model's structure with synthesis-inspired component scaling:
+//!
+//! * mantissa multiplier array — quadratic in the multiplier's mantissa
+//!   width `(m+1)²` (partial-product array);
+//! * alignment shifter + normalizer of the adder — `(m+1)·log₂(m+1)`
+//!   (barrel shifter depth × width) on the *accumulator* mantissa;
+//! * significand adder + rounding — linear in the accumulator mantissa;
+//! * exponent datapath — linear in the exponent widths;
+//! * fixed control overhead.
+//!
+//! Constants are calibrated so the well-known synthesis ratios hold
+//! (FP16 FPU ≈ ⅓–½ of FP32; see tests) and so the paper's headline claim
+//! — an extra 1.5–2.2× from narrowing the accumulator of an FP8
+//! multiplier — falls out (Fig. 1b).
+
+use crate::softfloat::FpFormat;
+
+/// An `FPa/b` unit in the paper's notation: a multiplier operating on
+/// `mult` inputs and an adder/accumulator operating at `acc`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FpuConfig {
+    pub mult: FpFormat,
+    pub acc: FpFormat,
+}
+
+impl FpuConfig {
+    pub fn new(mult: FpFormat, acc: FpFormat) -> Self {
+        FpuConfig { mult, acc }
+    }
+
+    /// Paper naming: `FP<mult-bits>/<acc-bits>`.
+    pub fn name(&self) -> String {
+        format!("FP{}/{}", self.mult.bits(), self.acc.bits())
+    }
+}
+
+/// The area model with its component coefficients (arbitrary gate-area
+/// units; only ratios are meaningful, as in the paper's figure).
+#[derive(Clone, Copy, Debug)]
+pub struct FpuAreaModel {
+    /// Multiplier array coefficient (per mantissa-bit²).
+    pub c_mul: f64,
+    /// Shifter coefficient (per bit·log-bit of the accumulator).
+    pub c_shift: f64,
+    /// Adder/round coefficient (per accumulator mantissa bit).
+    pub c_add: f64,
+    /// Exponent-path coefficient (per exponent bit).
+    pub c_exp: f64,
+    /// Fixed control overhead.
+    pub c_fixed: f64,
+}
+
+impl Default for FpuAreaModel {
+    fn default() -> Self {
+        // Calibrated against public synthesis ratios — see module docs.
+        FpuAreaModel {
+            c_mul: 1.0,
+            c_shift: 2.0,
+            c_add: 4.0,
+            c_exp: 6.0,
+            c_fixed: 10.0,
+        }
+    }
+}
+
+impl FpuAreaModel {
+    /// Absolute area (arbitrary units) of an FPU configuration.
+    pub fn area(&self, cfg: &FpuConfig) -> f64 {
+        let mm = (cfg.mult.man_bits + 1) as f64; // incl. hidden bit
+        let ma = (cfg.acc.man_bits + 1) as f64;
+        self.c_mul * mm * mm
+            + self.c_shift * ma * ma.log2().max(1.0)
+            + self.c_add * ma
+            + self.c_exp * (cfg.mult.exp_bits + cfg.acc.exp_bits) as f64
+            + self.c_fixed
+    }
+
+    /// Area normalized to the FP32/32 baseline (the y-axis of Fig. 1b).
+    pub fn relative_area(&self, cfg: &FpuConfig) -> f64 {
+        self.area(cfg) / self.area(&FpuConfig::new(FpFormat::FP32, FpFormat::FP32))
+    }
+
+    /// The Fig. 1b ladder of configurations, most to least precise.
+    pub fn fig1b_configs() -> Vec<FpuConfig> {
+        let fp16_acc = FpFormat::new(6, 9); // the paper's 16-b accumulator (1,6,9)
+        vec![
+            FpuConfig::new(FpFormat::FP32, FpFormat::FP32),
+            FpuConfig::new(FpFormat::FP16, FpFormat::FP32),
+            FpuConfig::new(FpFormat::FP8_152, FpFormat::FP32),
+            FpuConfig::new(FpFormat::FP16, fp16_acc),
+            FpuConfig::new(FpFormat::FP8_152, fp16_acc),
+            FpuConfig::new(FpFormat::FP8_152, FpFormat::new(6, 5)), // ~12-b acc
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> FpuAreaModel {
+        FpuAreaModel::default()
+    }
+
+    #[test]
+    fn fp32_baseline_is_one() {
+        let m = model();
+        let base = FpuConfig::new(FpFormat::FP32, FpFormat::FP32);
+        assert!((m.relative_area(&base) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn area_monotone_in_each_knob() {
+        let m = model();
+        // Narrower multiplier shrinks area, all else equal.
+        let wide = m.area(&FpuConfig::new(FpFormat::FP16, FpFormat::FP32));
+        let narrow = m.area(&FpuConfig::new(FpFormat::FP8_152, FpFormat::FP32));
+        assert!(narrow < wide);
+        // Narrower accumulator shrinks area, all else equal.
+        let acc_wide = m.area(&FpuConfig::new(FpFormat::FP8_152, FpFormat::FP32));
+        let acc_narrow = m.area(&FpuConfig::new(FpFormat::FP8_152, FpFormat::new(6, 9)));
+        assert!(acc_narrow < acc_wide);
+    }
+
+    #[test]
+    fn fp16_fpu_is_third_to_half_of_fp32() {
+        // Public synthesis results put a full FP16 FPU at ~25–50% of FP32.
+        let m = model();
+        let r = m.relative_area(&FpuConfig::new(FpFormat::FP16, FpFormat::FP16));
+        assert!((0.2..=0.5).contains(&r), "r={r}");
+    }
+
+    #[test]
+    fn paper_headline_accumulator_gain() {
+        // Fig. 1b's message: with an FP8 multiplier, narrowing the
+        // accumulator from 32-b to 16-b/12-b buys an extra 1.5–2.2×.
+        let m = model();
+        let fp8_32 = m.area(&FpuConfig::new(FpFormat::FP8_152, FpFormat::FP32));
+        let fp8_16 = m.area(&FpuConfig::new(FpFormat::FP8_152, FpFormat::new(6, 9)));
+        let fp8_12 = m.area(&FpuConfig::new(FpFormat::FP8_152, FpFormat::new(6, 5)));
+        let gain16 = fp8_32 / fp8_16;
+        let gain12 = fp8_32 / fp8_12;
+        assert!((1.5..=2.2).contains(&gain16), "gain16={gain16}");
+        assert!(gain12 >= gain16, "gain12={gain12} < gain16={gain16}");
+        assert!(gain12 <= 3.0, "gain12={gain12}");
+    }
+
+    #[test]
+    fn high_precision_accumulation_limits_benefits() {
+        // The paper's motivation: with a 32-b accumulator, dropping the
+        // multiplier from FP16 to FP8 saves little (accumulator dominates).
+        let m = model();
+        let fp16_32 = m.area(&FpuConfig::new(FpFormat::FP16, FpFormat::FP32));
+        let fp8_32 = m.area(&FpuConfig::new(FpFormat::FP8_152, FpFormat::FP32));
+        let gain = fp16_32 / fp8_32;
+        assert!(gain < 1.5, "multiplier-only gain should be limited: {gain}");
+    }
+
+    #[test]
+    fn config_names() {
+        assert_eq!(
+            FpuConfig::new(FpFormat::FP8_152, FpFormat::FP32).name(),
+            "FP8/32"
+        );
+        assert_eq!(
+            FpuConfig::new(FpFormat::FP16, FpFormat::new(6, 9)).name(),
+            "FP16/16"
+        );
+    }
+
+    #[test]
+    fn fig1b_ladder_is_decreasing() {
+        let m = model();
+        let areas: Vec<f64> = FpuAreaModel::fig1b_configs()
+            .iter()
+            .map(|c| m.relative_area(c))
+            .collect();
+        for w in areas.windows(2) {
+            assert!(w[1] < w[0] + 1e-12, "{areas:?}");
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Hardware cost models: the floating-point-unit area model behind the
+//! paper's Figure 1(b) ("estimated area benefits when reducing the
+//! precision of a floating-point unit").
+
+pub mod fpu;
+pub mod report;
+
+pub use fpu::{FpuConfig, FpuAreaModel};

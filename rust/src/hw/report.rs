@@ -1,0 +1,65 @@
+//! Rendering of the Fig. 1b area comparison as a text table/bar chart.
+
+use super::fpu::{FpuAreaModel, FpuConfig};
+
+/// One row of the Fig. 1b report.
+#[derive(Clone, Debug)]
+pub struct AreaRow {
+    pub name: String,
+    pub area: f64,
+    pub relative: f64,
+    /// Reduction factor vs the FP32/32 baseline.
+    pub reduction: f64,
+}
+
+/// Compute the Fig. 1b rows for a set of configurations.
+pub fn area_rows(model: &FpuAreaModel, configs: &[FpuConfig]) -> Vec<AreaRow> {
+    configs
+        .iter()
+        .map(|c| {
+            let rel = model.relative_area(c);
+            AreaRow {
+                name: c.name(),
+                area: model.area(c),
+                relative: rel,
+                reduction: 1.0 / rel,
+            }
+        })
+        .collect()
+}
+
+/// ASCII bar chart of relative areas (the shape of Fig. 1b).
+pub fn render(rows: &[AreaRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<10} {:>10} {:>10} {:>8}  chart\n",
+        "FPU", "area", "rel", "gain"
+    ));
+    for r in rows {
+        let bar = "#".repeat((r.relative * 50.0).round().max(1.0) as usize);
+        out.push_str(&format!(
+            "{:<10} {:>10.1} {:>10.3} {:>7.2}x  {}\n",
+            r.name, r.area, r.relative, r.reduction, bar
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_and_render() {
+        let model = FpuAreaModel::default();
+        let rows = area_rows(&model, &FpuAreaModel::fig1b_configs());
+        assert_eq!(rows.len(), 6);
+        assert!((rows[0].relative - 1.0).abs() < 1e-12);
+        assert!((rows[0].reduction - 1.0).abs() < 1e-12);
+        let text = render(&rows);
+        assert!(text.contains("FP32/32"));
+        assert!(text.contains("FP8/16"));
+        // Bars shrink monotonically down the ladder.
+        assert!(rows.last().unwrap().reduction > 3.0);
+    }
+}

@@ -1,0 +1,34 @@
+//! # abws — Accumulation Bit-Width Scaling
+//!
+//! Reproduction of *"Accumulation Bit-Width Scaling For Ultra-Low Precision
+//! Training Of Deep Networks"* (Sakr et al., ICLR 2019).
+//!
+//! The crate is organised as a three-layer stack:
+//!
+//! * **Layer 3 (this crate)** — the analysis + coordination layer: the
+//!   variance-retention-ratio (VRR) theory ([`vrr`]), a bit-accurate
+//!   reduced-precision floating-point simulator ([`softfloat`]), network
+//!   topology models ([`nets`]), the FPU area model ([`hw`]), Monte-Carlo
+//!   validation ([`mc`]), a pure-Rust reduced-precision trainer
+//!   ([`trainer`]) and the experiment coordinator ([`coordinator`]).
+//! * **Layer 2 (python/compile/model.py)** — a JAX model whose forward and
+//!   backward GEMMs use the reduced-precision accumulation kernel, lowered
+//!   once to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels/)** — the Pallas kernel implementing
+//!   chunked reduced-precision accumulation, verified against a pure-jnp
+//!   oracle.
+//!
+//! The [`runtime`] module loads the AOT artifacts and executes them on the
+//! PJRT CPU client; Python is never on the run path.
+
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod hw;
+pub mod mc;
+pub mod nets;
+pub mod runtime;
+pub mod softfloat;
+pub mod trainer;
+pub mod util;
+pub mod vrr;

@@ -1,0 +1,12 @@
+//! `abws` — Accumulation Bit-Width Scaling: CLI entry point.
+
+use abws::cli;
+use abws::util::argparse::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = cli::run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,10 @@
+//! Monte-Carlo validation of the VRR theory against the bit-accurate
+//! simulator: generate ensembles of reduced-precision accumulations,
+//! measure the empirical variance retention, and compare with Theorem 1 /
+//! Corollary 1.
+
+pub mod sim;
+pub mod validate;
+
+pub use sim::{empirical_vrr, McConfig, McResult};
+pub use validate::{validate_grid, GridPoint};

@@ -1,0 +1,192 @@
+//! Monte-Carlo measurement of the variance retention ratio.
+//!
+//! For each trial we draw `n` iid product terms `p_i = rnd_{m_p}(σ_p·Z)`,
+//! `Z ~ N(0,1)` (Assumption 1), run the reduced-precision accumulation,
+//! and compare the ensemble second moment of the reduced-precision result
+//! against the ensemble second moment of the exact sum of the *same*
+//! samples (paired design — removes most sampling noise from the ratio).
+
+use std::thread;
+
+use crate::softfloat::accumulate::{chunked_sum, exact_sum, sequential_sum};
+use crate::softfloat::format::FpFormat;
+use crate::softfloat::quant::{quantize, Rounding};
+use crate::util::rng::Pcg64;
+use crate::util::stats::Welford;
+
+/// Monte-Carlo experiment configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct McConfig {
+    /// Accumulation length.
+    pub n: usize,
+    /// Accumulator mantissa bits.
+    pub m_acc: u32,
+    /// Product mantissa bits (products are drawn pre-rounded to this).
+    pub m_p: u32,
+    /// Exponent bits of the accumulator (paper: 6).
+    pub e_acc: u32,
+    /// Chunk size (`None` = plain sequential accumulation).
+    pub chunk: Option<usize>,
+    /// Number of independent accumulations in the ensemble.
+    pub trials: usize,
+    /// Product standard deviation σ_p.
+    pub sigma_p: f64,
+    pub seed: u64,
+    /// Worker threads.
+    pub threads: usize,
+}
+
+impl McConfig {
+    pub fn new(n: usize, m_acc: u32) -> McConfig {
+        McConfig {
+            n,
+            m_acc,
+            m_p: 5,
+            e_acc: 6,
+            chunk: None,
+            trials: 256,
+            sigma_p: 1.0,
+            seed: 0x5eed,
+            threads: thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
+        }
+    }
+
+    pub fn with_chunk(mut self, chunk: usize) -> McConfig {
+        self.chunk = Some(chunk);
+        self
+    }
+
+    pub fn with_trials(mut self, trials: usize) -> McConfig {
+        self.trials = trials;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> McConfig {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Monte-Carlo outcome.
+#[derive(Clone, Copy, Debug)]
+pub struct McResult {
+    /// Empirical `Var(s_n)` of the reduced-precision ensemble.
+    pub var_swamping: f64,
+    /// Empirical `Var(s_n)` of the exact-sum ensemble (same samples).
+    pub var_ideal: f64,
+    /// `var_swamping / var_ideal` — the measured VRR.
+    pub vrr: f64,
+    pub trials: usize,
+}
+
+/// Run the Monte-Carlo experiment.
+pub fn empirical_vrr(cfg: &McConfig) -> McResult {
+    let acc_fmt = FpFormat::new(cfg.e_acc, cfg.m_acc);
+    let prod_fmt = FpFormat::new(6, cfg.m_p);
+    let threads = cfg.threads.max(1).min(cfg.trials.max(1));
+    let per = cfg.trials.div_ceil(threads);
+
+    let pairs: Vec<(Welford, Welford)> = thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let count = per.min(cfg.trials.saturating_sub(t * per));
+            if count == 0 {
+                break;
+            }
+            handles.push(scope.spawn(move || {
+                let mut rng = Pcg64::new(cfg.seed, t as u64 + 1);
+                let mut w_sw = Welford::new();
+                let mut w_id = Welford::new();
+                let mut terms = vec![0.0f64; cfg.n];
+                for _ in 0..count {
+                    for p in terms.iter_mut() {
+                        *p = quantize(
+                            rng.normal() * cfg.sigma_p,
+                            prod_fmt,
+                            Rounding::NearestEven,
+                        );
+                    }
+                    let reduced = match cfg.chunk {
+                        Some(c) => chunked_sum(&terms, c, acc_fmt, Rounding::NearestEven),
+                        None => sequential_sum(&terms, acc_fmt, Rounding::NearestEven),
+                    };
+                    w_sw.push(reduced);
+                    w_id.push(exact_sum(&terms));
+                }
+                (w_sw, w_id)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let (mut sw, mut id) = (Welford::new(), Welford::new());
+    for (a, b) in pairs {
+        sw = sw.merge(&a);
+        id = id.merge(&b);
+    }
+    let var_swamping = sw.variance();
+    let var_ideal = id.variance();
+    McResult {
+        var_swamping,
+        var_ideal,
+        vrr: var_swamping / var_ideal,
+        trials: sw.count() as usize,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wide_accumulator_retains_everything() {
+        let r = empirical_vrr(&McConfig::new(4_096, 20).with_trials(128));
+        assert!((r.vrr - 1.0).abs() < 0.05, "vrr={}", r.vrr);
+        assert_eq!(r.trials, 128);
+    }
+
+    #[test]
+    fn narrow_accumulator_loses_variance() {
+        let r = empirical_vrr(&McConfig::new(16_384, 5).with_trials(128));
+        assert!(r.vrr < 0.7, "vrr={}", r.vrr);
+    }
+
+    #[test]
+    fn ideal_variance_scales_linearly_in_n() {
+        // Var(s_n) ≈ n·σ_p² under ideal accumulation (Assumption 1).
+        let r1 = empirical_vrr(&McConfig::new(1_024, 20).with_trials(256));
+        let r4 = empirical_vrr(&McConfig::new(4_096, 20).with_trials(256));
+        let ratio = r4.var_ideal / r1.var_ideal;
+        assert!((ratio - 4.0).abs() < 1.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn chunking_recovers_variance() {
+        let base = McConfig::new(16_384, 5).with_trials(128);
+        let plain = empirical_vrr(&base);
+        let chunked = empirical_vrr(&base.with_chunk(64));
+        assert!(
+            chunked.vrr > plain.vrr + 0.1,
+            "chunked {} vs plain {}",
+            chunked.vrr,
+            plain.vrr
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed_and_threads() {
+        let mut cfg = McConfig::new(2_048, 8).with_trials(64).with_seed(7);
+        cfg.threads = 3;
+        let a = empirical_vrr(&cfg);
+        let b = empirical_vrr(&cfg);
+        assert_eq!(a.vrr, b.vrr);
+    }
+
+    #[test]
+    fn trial_split_is_exact() {
+        let mut cfg = McConfig::new(128, 10).with_trials(97);
+        cfg.threads = 8; // 97 not divisible by 8
+        let r = empirical_vrr(&cfg);
+        assert_eq!(r.trials, 97);
+    }
+}

@@ -1,0 +1,65 @@
+//! AlexNet (Krizhevsky et al. 2012) topology for ImageNet, batch 256,
+//! with the Table 1 group labels (Conv 1–5, FC 1–2; the final classifier
+//! layer is kept at 16-b precision by the paper and excluded here).
+
+use super::layer::{Layer, Network};
+
+/// ImageNet AlexNet, batch 256.
+pub fn alexnet_imagenet() -> Network {
+    let layers = vec![
+        // name, group, c_in, c_out, k, h_out, w_out
+        Layer::conv("conv1", "Conv 1", 3, 96, 11, 55, 55),
+        Layer::conv("conv2", "Conv 2", 96, 256, 5, 27, 27),
+        Layer::conv("conv3", "Conv 3", 256, 384, 3, 13, 13),
+        Layer::conv("conv4", "Conv 4", 384, 384, 3, 13, 13),
+        Layer::conv("conv5", "Conv 5", 384, 256, 3, 13, 13),
+        Layer::fc("fc6", "FC 1", 256 * 6 * 6, 4096),
+        Layer::fc("fc7", "FC 2", 4096, 4096),
+    ];
+    Network {
+        name: "ImageNet AlexNet".into(),
+        batch: 256,
+        layers,
+        first_layer: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::lengths::accum_lengths;
+
+    #[test]
+    fn seven_table1_rows() {
+        let net = alexnet_imagenet();
+        assert_eq!(
+            net.groups(),
+            vec!["Conv 1", "Conv 2", "Conv 3", "Conv 4", "Conv 5", "FC 1", "FC 2"]
+        );
+    }
+
+    #[test]
+    fn conv1_lengths() {
+        let net = alexnet_imagenet();
+        let l = accum_lengths(&net, &net.layers[0]);
+        assert_eq!(l.fwd, 3 * 11 * 11); // 363
+        assert_eq!(l.bwd, 96 * 11 * 11);
+        assert_eq!(l.grad, 256 * 55 * 55); // 774,400
+    }
+
+    #[test]
+    fn fc_lengths() {
+        let net = alexnet_imagenet();
+        let fc6 = accum_lengths(&net, &net.layers[5]);
+        assert_eq!(fc6.fwd, 9216);
+        assert_eq!(fc6.bwd, 4096);
+        assert_eq!(fc6.grad, 256);
+    }
+
+    #[test]
+    fn param_count_sane() {
+        // AlexNet conv+fc6+fc7 ≈ 2.3M + 37.7M + 16.8M ≈ 57M params.
+        let p = alexnet_imagenet().total_params();
+        assert!((50_000_000..65_000_000).contains(&p), "params={p}");
+    }
+}

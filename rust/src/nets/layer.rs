@@ -1,0 +1,137 @@
+//! Layer and network descriptions — just the shape information the
+//! accumulation-length analysis needs (paper Fig. 2): channel counts,
+//! kernel sizes, output spatial dims, and the mini-batch size.
+
+/// Kind of a compute layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// 2-D convolution.
+    Conv,
+    /// Fully connected (GEMM).
+    Fc,
+}
+
+/// One weight layer of a network, with everything needed to derive the
+/// three GEMM accumulation lengths.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    /// Display name, e.g. `"conv2_1a"` or `"fc6"`.
+    pub name: String,
+    /// Group label used by Table 1 (e.g. `"ResBlock 1"`, `"Conv 0"`).
+    pub group: String,
+    pub kind: LayerKind,
+    /// Input channels (fan-in channels).
+    pub c_in: usize,
+    /// Output channels.
+    pub c_out: usize,
+    /// Square kernel size (1 for FC).
+    pub kernel: usize,
+    /// Output feature-map height (1 for FC).
+    pub h_out: usize,
+    /// Output feature-map width (1 for FC).
+    pub w_out: usize,
+}
+
+impl Layer {
+    pub fn conv(
+        name: &str,
+        group: &str,
+        c_in: usize,
+        c_out: usize,
+        kernel: usize,
+        h_out: usize,
+        w_out: usize,
+    ) -> Layer {
+        Layer {
+            name: name.into(),
+            group: group.into(),
+            kind: LayerKind::Conv,
+            c_in,
+            c_out,
+            kernel,
+            h_out,
+            w_out,
+        }
+    }
+
+    pub fn fc(name: &str, group: &str, c_in: usize, c_out: usize) -> Layer {
+        Layer {
+            name: name.into(),
+            group: group.into(),
+            kind: LayerKind::Fc,
+            c_in,
+            c_out,
+            kernel: 1,
+            h_out: 1,
+            w_out: 1,
+        }
+    }
+
+    /// Weight-tensor parameter count.
+    pub fn params(&self) -> usize {
+        self.c_in * self.c_out * self.kernel * self.kernel
+    }
+}
+
+/// A whole network: its layers in order plus the training mini-batch size
+/// the paper used (GRAD accumulation runs across the batch).
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: String,
+    pub batch: usize,
+    pub layers: Vec<Layer>,
+    /// Index of the first layer (no BWD GEMM is needed for it — there is
+    /// no upstream activation gradient; Table 1 marks it N/A).
+    pub first_layer: usize,
+}
+
+impl Network {
+    /// Distinct group labels in layer order (Table 1 columns).
+    pub fn groups(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for l in &self.layers {
+            if out.last().map(|g| g != &l.group).unwrap_or(true) {
+                out.push(l.group.clone());
+            }
+        }
+        out
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_params() {
+        let l = Layer::conv("c", "g", 64, 128, 3, 28, 28);
+        assert_eq!(l.params(), 64 * 128 * 9);
+    }
+
+    #[test]
+    fn fc_shape_defaults() {
+        let l = Layer::fc("fc", "FC 1", 4096, 1000);
+        assert_eq!(l.kernel, 1);
+        assert_eq!((l.h_out, l.w_out), (1, 1));
+        assert_eq!(l.params(), 4_096_000);
+    }
+
+    #[test]
+    fn groups_dedup_preserves_order() {
+        let net = Network {
+            name: "t".into(),
+            batch: 1,
+            first_layer: 0,
+            layers: vec![
+                Layer::conv("a", "G1", 3, 16, 3, 32, 32),
+                Layer::conv("b", "G1", 16, 16, 3, 32, 32),
+                Layer::conv("c", "G2", 16, 32, 3, 16, 16),
+            ],
+        };
+        assert_eq!(net.groups(), vec!["G1", "G2"]);
+    }
+}

@@ -1,0 +1,124 @@
+//! Accumulation lengths of the three back-propagation GEMMs (paper
+//! Fig. 2). For a conv layer with `C_in` input channels, `C_out` output
+//! channels, `k×k` kernels, `H_out×W_out` output maps and mini-batch `B`:
+//!
+//! * **FWD**  — each output activation accumulates `C_in · k²` products;
+//! * **BWD**  — each input-gradient element accumulates `C_out · k²`;
+//! * **GRAD** — each weight gradient accumulates `B · H_out · W_out`
+//!   (across the batch and every output position).
+//!
+//! For FC layers the spatial terms collapse to 1.
+
+use super::layer::{Layer, LayerKind, Network};
+
+/// Which of the three GEMMs of one back-prop iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Gemm {
+    Fwd,
+    Bwd,
+    Grad,
+}
+
+impl Gemm {
+    pub const ALL: [Gemm; 3] = [Gemm::Fwd, Gemm::Bwd, Gemm::Grad];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Gemm::Fwd => "FWD",
+            Gemm::Bwd => "BWD",
+            Gemm::Grad => "GRAD",
+        }
+    }
+}
+
+/// The three accumulation lengths of one layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AccumLengths {
+    pub fwd: usize,
+    pub bwd: usize,
+    pub grad: usize,
+}
+
+impl AccumLengths {
+    pub fn get(&self, g: Gemm) -> usize {
+        match g {
+            Gemm::Fwd => self.fwd,
+            Gemm::Bwd => self.bwd,
+            Gemm::Grad => self.grad,
+        }
+    }
+}
+
+/// Accumulation lengths of `layer` inside `net` (the batch size comes
+/// from the network).
+pub fn accum_lengths(net: &Network, layer: &Layer) -> AccumLengths {
+    match layer.kind {
+        LayerKind::Conv => AccumLengths {
+            fwd: layer.c_in * layer.kernel * layer.kernel,
+            bwd: layer.c_out * layer.kernel * layer.kernel,
+            grad: net.batch * layer.h_out * layer.w_out,
+        },
+        LayerKind::Fc => AccumLengths {
+            fwd: layer.c_in,
+            bwd: layer.c_out,
+            grad: net.batch,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::layer::Layer;
+
+    fn net_with(batch: usize, layer: Layer) -> Network {
+        Network {
+            name: "t".into(),
+            batch,
+            first_layer: 0,
+            layers: vec![layer],
+        }
+    }
+
+    #[test]
+    fn conv_lengths() {
+        let net = net_with(128, Layer::conv("c", "g", 64, 128, 3, 28, 28));
+        let l = accum_lengths(&net, &net.layers[0]);
+        assert_eq!(l.fwd, 64 * 9);
+        assert_eq!(l.bwd, 128 * 9);
+        assert_eq!(l.grad, 128 * 28 * 28);
+    }
+
+    #[test]
+    fn fc_lengths() {
+        let net = net_with(256, Layer::fc("fc", "g", 4096, 1000));
+        let l = accum_lengths(&net, &net.layers[0]);
+        assert_eq!(l.fwd, 4096);
+        assert_eq!(l.bwd, 1000);
+        assert_eq!(l.grad, 256);
+    }
+
+    #[test]
+    fn grad_dominates_early_conv_layers() {
+        // The paper's core observation: GRAD lengths in early layers dwarf
+        // FWD/BWD (feature maps are biggest near the input).
+        let net = net_with(256, Layer::conv("conv1", "g", 3, 64, 7, 112, 112));
+        let l = accum_lengths(&net, &net.layers[0]);
+        assert!(l.grad > 100 * l.fwd);
+        assert!(l.grad > 100 * l.bwd);
+        assert_eq!(l.grad, 256 * 112 * 112); // 3.2M — the n behind (15,10)
+    }
+
+    #[test]
+    fn gemm_accessor_roundtrip() {
+        let a = AccumLengths {
+            fwd: 1,
+            bwd: 2,
+            grad: 3,
+        };
+        assert_eq!(a.get(Gemm::Fwd), 1);
+        assert_eq!(a.get(Gemm::Bwd), 2);
+        assert_eq!(a.get(Gemm::Grad), 3);
+        assert_eq!(Gemm::ALL.len(), 3);
+    }
+}

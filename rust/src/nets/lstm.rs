@@ -1,0 +1,136 @@
+//! Recurrent (LSTM) extension — the paper's own proposed future work
+//! (§6: "training via backpropagation in time could make the GRAD
+//! accumulation very large depending on the number of past time-steps
+//! used. In such a case, our analysis is of great relevance").
+//!
+//! For an LSTM layer with input size `d_in`, hidden size `d_h`, batch
+//! `B`, unrolled over `T` steps:
+//!
+//! * **FWD** — each gate pre-activation accumulates `d_in + d_h`
+//!   products (the concatenated input·W + hidden·U dot product);
+//! * **BWD** — each hidden-gradient element accumulates `4·d_h` products
+//!   (all four gates feed back through U);
+//! * **GRAD** — each weight gradient accumulates across the batch *and
+//!   every unrolled time step*: `B · T`. This is the accumulation that
+//!   grows linearly in the BPTT horizon and is where the analysis bites.
+
+use super::lengths::AccumLengths;
+use crate::vrr::solver::{min_m_acc, AccumSpec};
+
+/// An LSTM layer's shape for accumulation-length analysis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LstmSpec {
+    pub d_in: usize,
+    pub d_h: usize,
+    pub batch: usize,
+    /// BPTT unroll horizon (time steps).
+    pub timesteps: usize,
+}
+
+impl LstmSpec {
+    /// The three GEMM accumulation lengths of one LSTM layer under BPTT.
+    pub fn accum_lengths(&self) -> AccumLengths {
+        AccumLengths {
+            fwd: self.d_in + self.d_h,
+            bwd: 4 * self.d_h,
+            grad: self.batch * self.timesteps,
+        }
+    }
+
+    /// Predicted minimum accumulator mantissa widths `(normal, chunked)`
+    /// for each GEMM, at the paper's `m_p = 5` and the given NZR triple.
+    pub fn predict(
+        &self,
+        chunk: usize,
+        nzr_fwd: f64,
+        nzr_bwd: f64,
+        nzr_grad: f64,
+    ) -> [(u32, u32); 3] {
+        let l = self.accum_lengths();
+        let mut out = [(0u32, 0u32); 3];
+        for (slot, (n, nzr)) in out.iter_mut().zip([
+            (l.fwd, nzr_fwd),
+            (l.bwd, nzr_bwd),
+            (l.grad, nzr_grad),
+        ]) {
+            let spec = AccumSpec::plain(n).with_nzr(nzr);
+            *slot = (min_m_acc(&spec), min_m_acc(&spec.with_chunk(chunk)));
+        }
+        out
+    }
+
+    /// GRAD requirement as a function of the BPTT horizon — the curve the
+    /// paper's conclusion gestures at (longer horizons, more bits).
+    pub fn grad_bits_vs_horizon(&self, horizons: &[usize], nzr_grad: f64) -> Vec<(usize, u32)> {
+        horizons
+            .iter()
+            .map(|&t| {
+                let spec = AccumSpec::plain(self.batch * t).with_nzr(nzr_grad);
+                (t, min_m_acc(&spec))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn medium() -> LstmSpec {
+        LstmSpec {
+            d_in: 512,
+            d_h: 512,
+            batch: 64,
+            timesteps: 128,
+        }
+    }
+
+    #[test]
+    fn lengths_follow_bptt_structure() {
+        let l = medium().accum_lengths();
+        assert_eq!(l.fwd, 1024);
+        assert_eq!(l.bwd, 2048);
+        assert_eq!(l.grad, 64 * 128);
+    }
+
+    #[test]
+    fn grad_requirement_grows_with_horizon() {
+        let spec = medium();
+        let curve = spec.grad_bits_vs_horizon(&[8, 32, 128, 512, 2048], 1.0);
+        for w in curve.windows(2) {
+            assert!(w[1].1 >= w[0].1, "{curve:?}");
+        }
+        // A 256x longer horizon must cost several extra bits.
+        assert!(
+            curve.last().unwrap().1 >= curve.first().unwrap().1 + 3,
+            "{curve:?}"
+        );
+    }
+
+    #[test]
+    fn chunking_helps_long_horizons() {
+        let spec = LstmSpec {
+            timesteps: 1024,
+            ..medium()
+        };
+        let [_, _, (grad_normal, grad_chunked)] = spec.predict(64, 1.0, 0.5, 0.5);
+        assert!(grad_chunked < grad_normal);
+    }
+
+    #[test]
+    fn fwd_bwd_independent_of_horizon() {
+        let short = LstmSpec {
+            timesteps: 4,
+            ..medium()
+        }
+        .predict(64, 1.0, 0.5, 0.5);
+        let long = LstmSpec {
+            timesteps: 4096,
+            ..medium()
+        }
+        .predict(64, 1.0, 0.5, 0.5);
+        assert_eq!(short[0], long[0], "FWD must not depend on T");
+        assert_eq!(short[1], long[1], "BWD must not depend on T");
+        assert!(long[2].0 > short[2].0, "GRAD must depend on T");
+    }
+}

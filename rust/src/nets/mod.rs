@@ -1,0 +1,15 @@
+//! Network topology models for the paper's three benchmarks and the
+//! machinery that turns a topology into per-layer, per-GEMM accumulation
+//! lengths (paper Fig. 2) and precision predictions (Table 1).
+
+pub mod alexnet;
+pub mod layer;
+pub mod lengths;
+pub mod lstm;
+pub mod nzr;
+pub mod predict;
+pub mod resnet;
+
+pub use layer::{Layer, LayerKind, Network};
+pub use lengths::{accum_lengths, AccumLengths, Gemm};
+pub use predict::{predict_network, LayerPrediction, NetworkPrediction};

@@ -1,0 +1,137 @@
+//! Non-zero-ratio (NZR) models (paper §4.3).
+//!
+//! The paper estimates NZR "by making several observations from baseline
+//! data" on real GPU runs. That baseline is not reproducible here (no
+//! ImageNet, no GPU farm), so we substitute documented per-network,
+//! per-GEMM NZR constants — calibrated so the resulting Table 1
+//! predictions track the paper's (see DESIGN.md §5) and consistent with
+//! the known sparsity structure of ReLU networks:
+//!
+//! * FWD operands: weights (dense) × activations — conv0 sees raw images
+//!   (dense); interior layers see post-ReLU activations, but the paper's
+//!   FWD rows behave near-dense, so FWD keeps NZR 1.0.
+//! * BWD operands: weights × ReLU-masked gradients ≈ half zero.
+//! * GRAD operands: activations × gradients, both sparse — much sparser
+//!   for AlexNet (the paper: "the measured sparsity of the operands was
+//!   found to be much higher for AlexNet", explaining its lower GRAD
+//!   precisions despite similar lengths).
+
+use std::collections::BTreeMap;
+
+use super::lengths::Gemm;
+
+/// Per-GEMM NZR triple.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NzrTriple {
+    pub fwd: f64,
+    pub bwd: f64,
+    pub grad: f64,
+}
+
+impl NzrTriple {
+    pub const DENSE: NzrTriple = NzrTriple {
+        fwd: 1.0,
+        bwd: 1.0,
+        grad: 1.0,
+    };
+
+    pub fn get(&self, g: Gemm) -> f64 {
+        match g {
+            Gemm::Fwd => self.fwd,
+            Gemm::Bwd => self.bwd,
+            Gemm::Grad => self.grad,
+        }
+    }
+}
+
+/// NZR model: network-wide defaults plus per-group overrides (AlexNet's
+/// measured sparsity varies a lot layer to layer).
+#[derive(Clone, Debug)]
+pub struct NzrModel {
+    pub default: NzrTriple,
+    /// Overrides keyed by Table-1 group label.
+    pub per_group: BTreeMap<String, NzrTriple>,
+}
+
+impl NzrModel {
+    pub fn dense() -> NzrModel {
+        NzrModel {
+            default: NzrTriple::DENSE,
+            per_group: BTreeMap::new(),
+        }
+    }
+
+    pub fn uniform(fwd: f64, bwd: f64, grad: f64) -> NzrModel {
+        NzrModel {
+            default: NzrTriple { fwd, bwd, grad },
+            per_group: BTreeMap::new(),
+        }
+    }
+
+    pub fn with_group(mut self, group: &str, fwd: f64, bwd: f64, grad: f64) -> NzrModel {
+        self.per_group
+            .insert(group.to_string(), NzrTriple { fwd, bwd, grad });
+        self
+    }
+
+    pub fn lookup(&self, group: &str, gemm: Gemm) -> f64 {
+        self.per_group
+            .get(group)
+            .unwrap_or(&self.default)
+            .get(gemm)
+    }
+
+    /// Calibrated model for the two ResNets: dense FWD, ReLU-masked BWD
+    /// and GRAD operands (≈ half the products vanish).
+    pub fn resnet_default() -> NzrModel {
+        NzrModel::uniform(1.0, 0.5, 0.5)
+    }
+
+    /// Calibrated model for AlexNet: the paper reports much sparser GRAD
+    /// operands (ReLU + max-pool routing concentrates gradients), deepest
+    /// in the late convs / FC layers.
+    pub fn alexnet_default() -> NzrModel {
+        NzrModel::uniform(1.0, 0.5, 0.05)
+            .with_group("Conv 1", 1.0, 0.5, 0.03)
+            .with_group("Conv 2", 1.0, 0.5, 0.03)
+            .with_group("Conv 3", 1.0, 0.5, 0.05)
+            .with_group("Conv 4", 1.0, 0.5, 0.01)
+            .with_group("Conv 5", 1.0, 0.5, 0.01)
+            // FC gradients are much denser than the late convs' (no
+            // max-pool routing behind them): paper Table 1 needs ~6 bits
+            // for a batch-length-256 GRAD, consistent with NZR ≈ 0.5.
+            .with_group("FC 1", 1.0, 0.5, 0.5)
+            .with_group("FC 2", 1.0, 0.5, 0.5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_prefers_override() {
+        let m = NzrModel::uniform(1.0, 0.5, 0.5).with_group("Conv 1", 0.9, 0.4, 0.1);
+        assert_eq!(m.lookup("Conv 1", Gemm::Grad), 0.1);
+        assert_eq!(m.lookup("Conv 2", Gemm::Grad), 0.5);
+        assert_eq!(m.lookup("Conv 1", Gemm::Fwd), 0.9);
+    }
+
+    #[test]
+    fn dense_model_is_all_ones() {
+        let m = NzrModel::dense();
+        for g in Gemm::ALL {
+            assert_eq!(m.lookup("anything", g), 1.0);
+        }
+    }
+
+    #[test]
+    fn presets_are_in_range() {
+        for m in [NzrModel::resnet_default(), NzrModel::alexnet_default()] {
+            for g in Gemm::ALL {
+                let v = m.lookup("Conv 1", g);
+                assert!((0.0..=1.0).contains(&v));
+            }
+        }
+    }
+}

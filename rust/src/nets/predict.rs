@@ -1,0 +1,229 @@
+//! Table 1 generator: apply the VRR solver to every (layer, GEMM) of a
+//! network and aggregate per Table-1 group (worst case within the group,
+//! since one accumulator width is provisioned per layer group).
+
+use std::collections::BTreeMap;
+
+use super::layer::Network;
+use super::lengths::{accum_lengths, Gemm};
+use super::nzr::NzrModel;
+use crate::vrr::solver::{min_m_acc, AccumSpec};
+
+/// Predicted `(normal, chunked)` mantissa widths for one GEMM of one
+/// layer or group — the ordered tuples Table 1 prints.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Prediction {
+    pub normal: u32,
+    pub chunked: u32,
+}
+
+/// Per-layer detail (kept for Fig. 3-style per-layer plots).
+#[derive(Clone, Debug)]
+pub struct LayerPrediction {
+    pub layer: String,
+    pub group: String,
+    /// `None` for the BWD entry of the first layer (Table 1's N/A).
+    pub per_gemm: BTreeMap<&'static str, Option<Prediction>>,
+    pub lengths: super::lengths::AccumLengths,
+}
+
+/// Whole-network prediction: per-layer detail plus the per-group
+/// aggregation that reproduces Table 1.
+#[derive(Clone, Debug)]
+pub struct NetworkPrediction {
+    pub network: String,
+    pub chunk: usize,
+    pub layers: Vec<LayerPrediction>,
+    /// group → gemm-name → prediction (max over the group's layers).
+    pub groups: Vec<(String, BTreeMap<&'static str, Option<Prediction>>)>,
+}
+
+/// Predict accumulator mantissa widths for every layer and GEMM of `net`.
+///
+/// `m_p` is the product mantissa width (5 for the paper's (1,5,2) inputs)
+/// and `chunk` the chunk size of the chunked-accumulation column (64 in
+/// the paper).
+pub fn predict_network(
+    net: &Network,
+    nzr: &NzrModel,
+    m_p: u32,
+    chunk: usize,
+) -> NetworkPrediction {
+    let mut layers = Vec::new();
+    for (idx, layer) in net.layers.iter().enumerate() {
+        let lengths = accum_lengths(net, layer);
+        let mut per_gemm: BTreeMap<&'static str, Option<Prediction>> = BTreeMap::new();
+        for gemm in Gemm::ALL {
+            if gemm == Gemm::Bwd && idx == net.first_layer {
+                per_gemm.insert(gemm.name(), None); // Table 1's N/A
+                continue;
+            }
+            let spec = AccumSpec {
+                n: lengths.get(gemm),
+                m_p,
+                nzr: nzr.lookup(&layer.group, gemm),
+                chunk: None,
+            };
+            let normal = min_m_acc(&spec);
+            let chunked = min_m_acc(&spec.with_chunk(chunk));
+            per_gemm.insert(
+                gemm.name(),
+                Some(Prediction { normal, chunked }),
+            );
+        }
+        layers.push(LayerPrediction {
+            layer: layer.name.clone(),
+            group: layer.group.clone(),
+            per_gemm,
+            lengths,
+        });
+    }
+
+    // Aggregate: max over each group (a group shares one FPU config).
+    let mut groups: Vec<(String, BTreeMap<&'static str, Option<Prediction>>)> = Vec::new();
+    for g in net.groups() {
+        let mut agg: BTreeMap<&'static str, Option<Prediction>> = BTreeMap::new();
+        for gemm in Gemm::ALL {
+            let mut best: Option<Prediction> = None;
+            for lp in layers.iter().filter(|lp| lp.group == g) {
+                if let Some(Some(p)) = lp.per_gemm.get(gemm.name()) {
+                    best = Some(match best {
+                        None => *p,
+                        Some(b) => Prediction {
+                            normal: b.normal.max(p.normal),
+                            chunked: b.chunked.max(p.chunked),
+                        },
+                    });
+                }
+            }
+            agg.insert(gemm.name(), best);
+        }
+        groups.push((g, agg));
+    }
+
+    NetworkPrediction {
+        network: net.name.clone(),
+        chunk,
+        layers,
+        groups,
+    }
+}
+
+impl NetworkPrediction {
+    /// Render the Table-1 style text table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.network));
+        let header: Vec<String> = std::iter::once("Layer(s)".to_string())
+            .chain(self.groups.iter().map(|(g, _)| g.clone()))
+            .collect();
+        out.push_str(&format!("{}\n", header.join(" | ")));
+        for gemm in ["FWD", "BWD", "GRAD"] {
+            let mut row = vec![gemm.to_string()];
+            for (_, agg) in &self.groups {
+                row.push(match agg.get(gemm) {
+                    Some(Some(p)) => format!("({},{})", p.normal, p.chunked),
+                    _ => "N/A".to_string(),
+                });
+            }
+            out.push_str(&format!("{}\n", row.join(" | ")));
+        }
+        out
+    }
+
+    /// Look up the group-level prediction for (group, gemm).
+    pub fn group_prediction(&self, group: &str, gemm: &str) -> Option<Prediction> {
+        self.groups
+            .iter()
+            .find(|(g, _)| g == group)
+            .and_then(|(_, agg)| agg.get(gemm).copied().flatten())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::alexnet::alexnet_imagenet;
+    use crate::nets::nzr::NzrModel;
+    use crate::nets::resnet::{resnet18_imagenet, resnet32_cifar10};
+
+    #[test]
+    fn first_layer_bwd_is_na() {
+        let net = resnet32_cifar10();
+        let pred = predict_network(&net, &NzrModel::resnet_default(), 5, 64);
+        assert_eq!(pred.group_prediction("Conv 0", "BWD"), None);
+        assert!(pred.group_prediction("Conv 0", "FWD").is_some());
+    }
+
+    #[test]
+    fn chunked_never_needs_more_bits() {
+        for (net, nzr) in [
+            (resnet32_cifar10(), NzrModel::resnet_default()),
+            (resnet18_imagenet(), NzrModel::resnet_default()),
+            (alexnet_imagenet(), NzrModel::alexnet_default()),
+        ] {
+            let pred = predict_network(&net, &nzr, 5, 64);
+            for (g, agg) in &pred.groups {
+                for (gemm, p) in agg {
+                    if let Some(p) = p {
+                        assert!(
+                            p.chunked <= p.normal,
+                            "{} {g} {gemm}: chunked {} > normal {}",
+                            net.name,
+                            p.chunked,
+                            p.normal
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grad_needs_most_precision_near_input() {
+        // Paper Table 1 caption: "GRAD … needs the most precision for
+        // layers/blocks close to the input".
+        let net = resnet18_imagenet();
+        let pred = predict_network(&net, &NzrModel::resnet_default(), 5, 64);
+        let g0 = pred.group_prediction("Conv 0", "GRAD").unwrap();
+        let g4 = pred.group_prediction("ResBlock 4", "GRAD").unwrap();
+        assert!(g0.normal > g4.normal, "{} vs {}", g0.normal, g4.normal);
+        let f0 = pred.group_prediction("Conv 0", "FWD").unwrap();
+        assert!(g0.normal > f0.normal);
+    }
+
+    #[test]
+    fn cifar_needs_less_than_imagenet() {
+        // Paper: "The required accumulation precision for CIFAR-10
+        // ResNet 32 is in general lower than that of the ImageNet
+        // networks" (shorter dot products).
+        let c = predict_network(&resnet32_cifar10(), &NzrModel::resnet_default(), 5, 64);
+        let i = predict_network(&resnet18_imagenet(), &NzrModel::resnet_default(), 5, 64);
+        let cmax = c
+            .groups
+            .iter()
+            .flat_map(|(_, a)| a.values().flatten())
+            .map(|p| p.normal)
+            .max()
+            .unwrap();
+        let imax = i
+            .groups
+            .iter()
+            .flat_map(|(_, a)| a.values().flatten())
+            .map(|p| p.normal)
+            .max()
+            .unwrap();
+        assert!(cmax < imax, "cifar {cmax} vs imagenet {imax}");
+    }
+
+    #[test]
+    fn render_contains_all_groups() {
+        let net = alexnet_imagenet();
+        let pred = predict_network(&net, &NzrModel::alexnet_default(), 5, 64);
+        let text = pred.render();
+        for g in net.groups() {
+            assert!(text.contains(&g), "missing {g} in:\n{text}");
+        }
+        assert!(text.contains("N/A"));
+    }
+}

@@ -1,0 +1,159 @@
+//! ResNet topologies: CIFAR-10 ResNet-32 (He et al. 2015 §4.2 family:
+//! 3 stages × 5 basic blocks of two 3×3 convs) and ImageNet ResNet-18
+//! (4 stages × 2 basic blocks), with the group labels of paper Table 1.
+
+use super::layer::{Layer, Network};
+
+/// CIFAR-10 ResNet-32, batch 128 (the configuration of Wang et al. 2018).
+///
+/// conv0: 3→16 @ 32×32, then stages of 5 basic blocks:
+/// ResBlock 1: 16→16 @ 32×32, ResBlock 2: 16/32→32 @ 16×16,
+/// ResBlock 3: 32/64→64 @ 8×8.
+pub fn resnet32_cifar10() -> Network {
+    let mut layers = vec![Layer::conv("conv0", "Conv 0", 3, 16, 3, 32, 32)];
+    let stages: [(usize, usize, usize, &str); 3] = [
+        (16, 32, 1, "ResBlock 1"),
+        (32, 16, 2, "ResBlock 2"),
+        (64, 8, 3, "ResBlock 3"),
+    ];
+    let mut c_prev = 16;
+    for (c, hw, stage, group) in stages {
+        for b in 0..5 {
+            let c_in_first = if b == 0 { c_prev } else { c };
+            layers.push(Layer::conv(
+                &format!("conv{stage}_{b}a"),
+                group,
+                c_in_first,
+                c,
+                3,
+                hw,
+                hw,
+            ));
+            layers.push(Layer::conv(
+                &format!("conv{stage}_{b}b"),
+                group,
+                c,
+                c,
+                3,
+                hw,
+                hw,
+            ));
+        }
+        c_prev = c;
+    }
+    Network {
+        name: "CIFAR-10 ResNet 32".into(),
+        batch: 128,
+        layers,
+        first_layer: 0,
+    }
+}
+
+/// ImageNet ResNet-18, batch 256.
+///
+/// conv0: 7×7, 3→64, output 112×112; stages of 2 basic blocks:
+/// ResBlock 1: 64 @ 56×56, ResBlock 2: 128 @ 28×28,
+/// ResBlock 3: 256 @ 14×14, ResBlock 4: 512 @ 7×7.
+pub fn resnet18_imagenet() -> Network {
+    let mut layers = vec![Layer::conv("conv0", "Conv 0", 3, 64, 7, 112, 112)];
+    let stages: [(usize, usize, usize, &str); 4] = [
+        (64, 56, 1, "ResBlock 1"),
+        (128, 28, 2, "ResBlock 2"),
+        (256, 14, 3, "ResBlock 3"),
+        (512, 7, 4, "ResBlock 4"),
+    ];
+    let mut c_prev = 64;
+    for (c, hw, stage, group) in stages {
+        for b in 0..2 {
+            let c_in_first = if b == 0 { c_prev } else { c };
+            layers.push(Layer::conv(
+                &format!("conv{stage}_{b}a"),
+                group,
+                c_in_first,
+                c,
+                3,
+                hw,
+                hw,
+            ));
+            layers.push(Layer::conv(
+                &format!("conv{stage}_{b}b"),
+                group,
+                c,
+                c,
+                3,
+                hw,
+                hw,
+            ));
+        }
+        c_prev = c;
+    }
+    Network {
+        name: "ImageNet ResNet 18".into(),
+        batch: 256,
+        layers,
+        first_layer: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::lengths::accum_lengths;
+
+    #[test]
+    fn resnet32_layer_count() {
+        // 1 stem + 3 stages × 5 blocks × 2 convs = 31 weight convs
+        // (+ the FC classifier which the paper keeps at 16-b and excludes).
+        let net = resnet32_cifar10();
+        assert_eq!(net.layers.len(), 31);
+        assert_eq!(
+            net.groups(),
+            vec!["Conv 0", "ResBlock 1", "ResBlock 2", "ResBlock 3"]
+        );
+    }
+
+    #[test]
+    fn resnet32_grad_lengths_quadruple_between_blocks() {
+        // Paper §3: "The GRAD accumulation length in the former is much
+        // longer (4×) than the latter" — halving H,W quarters B·H·W.
+        let net = resnet32_cifar10();
+        let b1 = net.layers.iter().find(|l| l.group == "ResBlock 1").unwrap();
+        let b2 = net.layers.iter().find(|l| l.group == "ResBlock 2").unwrap();
+        let g1 = accum_lengths(&net, b1).grad;
+        let g2 = accum_lengths(&net, b2).grad;
+        assert_eq!(g1, 4 * g2);
+        assert_eq!(g1, 128 * 32 * 32);
+    }
+
+    #[test]
+    fn resnet18_shapes() {
+        let net = resnet18_imagenet();
+        assert_eq!(net.layers.len(), 17);
+        assert_eq!(net.batch, 256);
+        let conv0 = &net.layers[0];
+        let l = accum_lengths(&net, conv0);
+        assert_eq!(l.fwd, 3 * 49);
+        assert_eq!(l.grad, 256 * 112 * 112); // 3,211,264
+        // Channel growth doubles each stage.
+        let last = net.layers.last().unwrap();
+        assert_eq!(last.c_out, 512);
+        assert_eq!((last.h_out, last.w_out), (7, 7));
+    }
+
+    #[test]
+    fn resnet18_param_count_sane() {
+        // ~11M conv params for ResNet-18 (no FC): we count 10.99M.
+        let net = resnet18_imagenet();
+        let p = net.total_params();
+        assert!(
+            (9_000_000..13_000_000).contains(&p),
+            "params={p}"
+        );
+    }
+
+    #[test]
+    fn first_conv_is_marked() {
+        assert_eq!(resnet32_cifar10().first_layer, 0);
+        assert_eq!(resnet18_imagenet().first_layer, 0);
+    }
+}

@@ -1,0 +1,153 @@
+//! Artifact registry: discovery and naming of the AOT-compiled HLO-text
+//! artifacts produced by `make artifacts` (python/compile/aot.py).
+//!
+//! Naming convention (shared with aot.py):
+//! `train_step_<variant>.hlo.txt` where `<variant>` encodes the
+//! accumulation precision plan, e.g. `baseline`, `macc12`,
+//! `macc12_chunk64`. A `manifest.json` written by aot.py records the
+//! model dimensions each artifact was lowered for.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Model dimensions an artifact set was lowered for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelDims {
+    pub batch: usize,
+    pub dim: usize,
+    pub hidden: usize,
+    pub classes: usize,
+}
+
+/// The artifact directory with its manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactStore {
+    pub root: PathBuf,
+    pub dims: ModelDims,
+    /// variant name → artifact path.
+    pub variants: BTreeMap<String, PathBuf>,
+}
+
+impl ArtifactStore {
+    /// Open an artifact directory and parse its manifest.
+    pub fn open(root: impl AsRef<Path>) -> Result<ArtifactStore> {
+        let root = root.as_ref().to_path_buf();
+        let manifest_path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let get = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .map(|v| v as usize)
+                .with_context(|| format!("manifest missing '{k}'"))
+        };
+        let dims = ModelDims {
+            batch: get("batch")?,
+            dim: get("dim")?,
+            hidden: get("hidden")?,
+            classes: get("classes")?,
+        };
+        let mut variants = BTreeMap::new();
+        if let Some(arr) = j.get("variants").and_then(Json::as_arr) {
+            for v in arr {
+                if let Some(name) = v.as_str() {
+                    let p = root.join(format!("train_step_{name}.hlo.txt"));
+                    variants.insert(name.to_string(), p);
+                }
+            }
+        }
+        if variants.is_empty() {
+            bail!("manifest lists no variants");
+        }
+        Ok(ArtifactStore {
+            root,
+            dims,
+            variants,
+        })
+    }
+
+    /// Path of a variant's HLO artifact (error lists available ones).
+    pub fn path(&self, variant: &str) -> Result<&Path> {
+        match self.variants.get(variant) {
+            Some(p) => Ok(p),
+            None => bail!(
+                "unknown variant '{variant}'; available: {}",
+                self.variants
+                    .keys()
+                    .cloned()
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        }
+    }
+
+    /// Check that every listed artifact file actually exists.
+    pub fn verify(&self) -> Result<()> {
+        for (name, path) in &self.variants {
+            if !path.exists() {
+                bail!("artifact for '{name}' missing: {}", path.display());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+
+    fn write_manifest(dir: &Path, variants: &[&str]) {
+        let vs: Vec<String> = variants.iter().map(|v| format!("\"{v}\"")).collect();
+        fs::write(
+            dir.join("manifest.json"),
+            format!(
+                r#"{{"batch":32,"dim":256,"hidden":64,"classes":10,"variants":[{}]}}"#,
+                vs.join(",")
+            ),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn open_and_lookup() {
+        let dir = std::env::temp_dir().join("abws_artifact_test_1");
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, &["baseline", "macc12"]);
+        let store = ArtifactStore::open(&dir).unwrap();
+        assert_eq!(store.dims.batch, 32);
+        assert_eq!(store.dims.classes, 10);
+        assert!(store
+            .path("macc12")
+            .unwrap()
+            .ends_with("train_step_macc12.hlo.txt"));
+        assert!(store.path("nope").is_err());
+        let err = format!("{:#}", store.path("nope").unwrap_err());
+        assert!(err.contains("baseline"), "{err}");
+    }
+
+    #[test]
+    fn verify_detects_missing_files() {
+        let dir = std::env::temp_dir().join("abws_artifact_test_2");
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, &["baseline"]);
+        let store = ArtifactStore::open(&dir).unwrap();
+        assert!(store.verify().is_err());
+        fs::write(dir.join("train_step_baseline.hlo.txt"), "HloModule x").unwrap();
+        assert!(store.verify().is_ok());
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = std::env::temp_dir().join("abws_artifact_test_none");
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        assert!(ArtifactStore::open(&dir).is_err());
+    }
+}

@@ -1,0 +1,78 @@
+//! Thin ownership wrapper around the PJRT CPU client plus HLO-text
+//! loading and literal conversion helpers.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use crate::softfloat::tensor::Tensor;
+
+/// The PJRT runtime: one CPU client, many compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    ///
+    /// HLO text (not a serialized `HloModuleProto`) is the interchange
+    /// format: jax ≥ 0.5 emits 64-bit instruction ids that xla_extension
+    /// 0.5.1 rejects; the text parser reassigns ids.
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Execute a compiled artifact on literal inputs, returning the
+    /// flattened output tuple.
+    pub fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → always a tuple.
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// Convert a [`Tensor`] into an f32 literal of the same shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+}
+
+/// Convert an f32 literal back into a [`Tensor`].
+pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = l.to_vec::<f32>()?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+/// Build an i32 label literal `[n]` from usize labels.
+pub fn labels_to_literal(y: &[usize]) -> Result<xla::Literal> {
+    let v: Vec<i32> = y.iter().map(|&c| c as i32).collect();
+    let dims = [v.len() as i64];
+    Ok(xla::Literal::vec1(&v).reshape(&dims)?)
+}
+
+/// Extract a scalar f32 from a literal (loss values etc.).
+pub fn scalar_f32(l: &xla::Literal) -> Result<f32> {
+    Ok(l.to_vec::<f32>()?[0])
+}

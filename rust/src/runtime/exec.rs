@@ -1,0 +1,110 @@
+//! The AOT train-step executor: owns the compiled HLO train step and the
+//! parameter/optimizer state (as literals), and advances training one
+//! batch at a time from Rust. This is the L3 hot path — no Python.
+//!
+//! Artifact calling convention (must match python/compile/model.py):
+//! inputs  `(w1, w2, m1, m2, x, y)`;
+//! outputs `(w1', w2', m1', m2', loss, acc)` as a flat tuple.
+
+use anyhow::{ensure, Context, Result};
+
+use super::artifact::{ArtifactStore, ModelDims};
+use super::client::{labels_to_literal, scalar_f32, tensor_to_literal, Runtime};
+use crate::data::synth::Dataset;
+use crate::softfloat::tensor::Tensor;
+use crate::trainer::metrics::{RunMetrics, StepRecord};
+use crate::util::rng::Pcg64;
+
+/// Executor for one compiled train-step variant.
+pub struct TrainStepExecutor<'rt> {
+    rt: &'rt Runtime,
+    exe: xla::PjRtLoadedExecutable,
+    pub dims: ModelDims,
+    /// `[w1, w2, m1, m2]` — carried across steps as literals.
+    state: Vec<xla::Literal>,
+    pub variant: String,
+}
+
+impl<'rt> TrainStepExecutor<'rt> {
+    /// Compile `variant` from `store` and He-initialize the parameters.
+    pub fn new(
+        rt: &'rt Runtime,
+        store: &ArtifactStore,
+        variant: &str,
+        seed: u64,
+    ) -> Result<Self> {
+        let path = store.path(variant)?;
+        let exe = rt
+            .compile_hlo_file(path)
+            .with_context(|| format!("compiling variant '{variant}'"))?;
+        let d = store.dims;
+        let mut rng = Pcg64::seeded(seed);
+        let w1 = Tensor::randn(&[d.dim, d.hidden], (2.0 / d.dim as f64).sqrt(), &mut rng);
+        let w2 = Tensor::randn(
+            &[d.hidden, d.classes],
+            (2.0 / d.hidden as f64).sqrt(),
+            &mut rng,
+        );
+        let m1 = Tensor::zeros(&[d.dim, d.hidden]);
+        let m2 = Tensor::zeros(&[d.hidden, d.classes]);
+        let state = vec![
+            tensor_to_literal(&w1)?,
+            tensor_to_literal(&w2)?,
+            tensor_to_literal(&m1)?,
+            tensor_to_literal(&m2)?,
+        ];
+        Ok(TrainStepExecutor {
+            rt,
+            exe,
+            dims: d,
+            state,
+            variant: variant.to_string(),
+        })
+    }
+
+    /// One training step; returns `(loss, train_acc)`.
+    pub fn step(&mut self, x: &Tensor, y: &[usize]) -> Result<(f64, f64)> {
+        ensure!(
+            x.shape == vec![self.dims.batch, self.dims.dim],
+            "batch shape {:?} does not match artifact dims {:?}",
+            x.shape,
+            self.dims
+        );
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(6);
+        inputs.append(&mut self.state);
+        inputs.push(tensor_to_literal(x)?);
+        inputs.push(labels_to_literal(y)?);
+        let mut outs = self.rt.run(&self.exe, &inputs)?;
+        ensure!(outs.len() == 6, "expected 6 outputs, got {}", outs.len());
+        let acc = scalar_f32(&outs[5])? as f64;
+        let loss = scalar_f32(&outs[4])? as f64;
+        outs.truncate(4);
+        self.state = outs;
+        Ok((loss, acc))
+    }
+
+    /// Train over a dataset for `steps` batches; returns the metric trace.
+    pub fn train(&mut self, data: &Dataset, steps: usize) -> Result<RunMetrics> {
+        let mut metrics = RunMetrics::default();
+        for step in 0..steps {
+            let (xb, yb) = data.batch(step, self.dims.batch);
+            let (loss, train_acc) = self.step(&xb, &yb)?;
+            metrics.push(StepRecord {
+                step,
+                loss,
+                train_acc,
+            });
+            if metrics.diverged {
+                break;
+            }
+        }
+        Ok(metrics)
+    }
+
+    /// Current parameter tensors `(w1, w2)` copied back to host tensors.
+    pub fn params(&self) -> Result<(Tensor, Tensor)> {
+        let w1 = super::client::literal_to_tensor(&self.state[0])?;
+        let w2 = super::client::literal_to_tensor(&self.state[1])?;
+        Ok((w1, w2))
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the HLO-text artifacts AOT-compiled by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client —
+//! Python is never on this path (see /opt/xla-example/load_hlo for the
+//! interchange rationale: HLO *text*, not serialized protos).
+
+pub mod artifact;
+pub mod client;
+pub mod exec;
+
+pub use artifact::ArtifactStore;
+pub use client::Runtime;
+pub use exec::TrainStepExecutor;

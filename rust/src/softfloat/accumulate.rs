@@ -1,0 +1,255 @@
+//! Accumulation algorithms under reduced precision: sequential, two-level
+//! chunked (paper §4.2, Wang et al. 2018), and pairwise (tree) reduction
+//! as a classical stable baseline, plus an exact Neumaier reference sum.
+
+use super::arith::RpArith;
+use super::format::FpFormat;
+use super::quant::{quantize, Rounding};
+
+/// Streaming reduced-precision accumulator (the hardware register model).
+#[derive(Clone, Debug)]
+pub struct Accumulator {
+    arith: RpArith,
+    sum: f64,
+    count: u64,
+}
+
+impl Accumulator {
+    pub fn new(arith: RpArith) -> Self {
+        Accumulator {
+            arith,
+            sum: 0.0,
+            count: 0,
+        }
+    }
+
+    /// Add one (already product-quantized) term.
+    #[inline]
+    pub fn push(&mut self, p: f64) {
+        self.sum = self.arith.add(self.sum, p);
+        self.count += 1;
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+}
+
+/// Sequential reduced-precision sum: `s_{i} = rnd(s_{i-1} + p_i)`.
+pub fn sequential_sum(terms: &[f64], acc_fmt: FpFormat, mode: Rounding) -> f64 {
+    let mut s = 0.0;
+    for &p in terms {
+        s = quantize(s + p, acc_fmt, mode);
+    }
+    s
+}
+
+/// Two-level chunked reduced-precision sum (paper §4.2): split into
+/// chunks of `chunk` terms, accumulate each chunk sequentially at
+/// `acc_fmt`, then accumulate the chunk results sequentially at `acc_fmt`.
+///
+/// A trailing partial chunk is handled naturally (shorter intra sum).
+pub fn chunked_sum(terms: &[f64], chunk: usize, acc_fmt: FpFormat, mode: Rounding) -> f64 {
+    assert!(chunk > 0, "chunk size must be positive");
+    let mut inter = 0.0;
+    for block in terms.chunks(chunk) {
+        let intra = sequential_sum(block, acc_fmt, mode);
+        inter = quantize(inter + intra, acc_fmt, mode);
+    }
+    inter
+}
+
+/// Pairwise (binary-tree) reduced-precision sum — the classical
+/// `O(log n)`-error algorithm, used as an ablation baseline against the
+/// paper's chunked scheme.
+pub fn pairwise_sum(terms: &[f64], acc_fmt: FpFormat, mode: Rounding) -> f64 {
+    fn rec(t: &[f64], fmt: FpFormat, mode: Rounding) -> f64 {
+        match t.len() {
+            0 => 0.0,
+            1 => t[0],
+            n => {
+                let (a, b) = t.split_at(n / 2);
+                quantize(rec(a, fmt, mode) + rec(b, fmt, mode), fmt, mode)
+            }
+        }
+    }
+    rec(terms, acc_fmt, mode)
+}
+
+/// Exact (compensated) reference sum — Neumaier's improved Kahan
+/// summation; error is O(1) ulps of the result in f64, effectively exact
+/// relative to the reduced-precision formats under study.
+pub fn exact_sum(terms: &[f64]) -> f64 {
+    let mut sum = 0.0;
+    let mut comp = 0.0;
+    for &x in terms {
+        let t = sum + x;
+        if sum.abs() >= x.abs() {
+            comp += (sum - t) + x;
+        } else {
+            comp += (x - t) + sum;
+        }
+        sum = t;
+    }
+    sum + comp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    const MODE: Rounding = Rounding::NearestEven;
+
+    #[test]
+    fn exact_sum_handles_cancellation() {
+        let terms = [1e16, 1.0, -1e16];
+        assert_eq!(exact_sum(&terms), 1.0);
+    }
+
+    #[test]
+    fn all_algorithms_agree_in_wide_precision() {
+        let mut rng = Pcg64::seeded(8);
+        let terms: Vec<f64> = (0..500).map(|_| rng.normal()).collect();
+        let wide = FpFormat::new(11, 42); // far wider than needed
+        let want = exact_sum(&terms);
+        for got in [
+            sequential_sum(&terms, wide, MODE),
+            chunked_sum(&terms, 64, wide, MODE),
+            pairwise_sum(&terms, wide, MODE),
+        ] {
+            assert!((got - want).abs() < 1e-9 * want.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn sequential_swamps_long_positive_sums() {
+        // Summing n ones with m_acc=4: once s reaches 2^5=32, adding 1.0
+        // (half the quantum 2.0 at that binade) ties-to-even and stalls.
+        let fmt = FpFormat::accumulator(4);
+        let terms = vec![1.0; 1000];
+        let s = sequential_sum(&terms, fmt, MODE);
+        assert!(s < 1000.0, "expected swamping, got {s}");
+        // The classic stall point: s = 2^{m_acc+1} + ... bounded well below n.
+        assert!(s <= 64.0, "s={s}");
+    }
+
+    #[test]
+    fn chunking_rescues_the_same_sum() {
+        let fmt = FpFormat::accumulator(4);
+        let terms = vec![1.0; 1024];
+        let seq = sequential_sum(&terms, fmt, MODE);
+        let chk = chunked_sum(&terms, 32, fmt, MODE);
+        assert!(chk > seq, "chunked {chk} should beat sequential {seq}");
+        // 32 chunks of 32 → intra sums are exact (32 = 2^5 with m=4 holds
+        // integers to 2^5); inter sum of 32 values of 32.0 is exact too.
+        assert_eq!(chk, 1024.0);
+    }
+
+    #[test]
+    fn chunked_equals_sequential_when_chunk_covers_all() {
+        let mut rng = Pcg64::seeded(12);
+        let terms: Vec<f64> = (0..256).map(|_| rng.normal()).collect();
+        let fmt = FpFormat::accumulator(8);
+        // One intra pass + one inter add of the single intra result: the
+        // final inter add of (0 + intra) re-quantizes an already
+        // representable value, so results match exactly.
+        assert_eq!(
+            chunked_sum(&terms, 256, fmt, MODE),
+            sequential_sum(&terms, fmt, MODE)
+        );
+    }
+
+    #[test]
+    fn accumulator_streaming_matches_batch() {
+        let mut rng = Pcg64::seeded(21);
+        let terms: Vec<f64> = (0..777).map(|_| rng.normal() * 3.0).collect();
+        let arith = RpArith::paper(7);
+        let mut acc = Accumulator::new(arith);
+        for &t in &terms {
+            acc.push(t);
+        }
+        assert_eq!(
+            acc.sum(),
+            sequential_sum(&terms, FpFormat::accumulator(7), MODE)
+        );
+        assert_eq!(acc.count(), 777);
+    }
+
+    #[test]
+    fn pairwise_beats_sequential_on_long_sums() {
+        let fmt = FpFormat::accumulator(5);
+        let terms = vec![1.0; 4096];
+        let seq = sequential_sum(&terms, fmt, MODE);
+        let pw = pairwise_sum(&terms, fmt, MODE);
+        assert!(pw > seq);
+    }
+
+    #[test]
+    fn truncation_mode_loses_more_than_rne() {
+        let fmt = FpFormat::accumulator(6);
+        let mut rng = Pcg64::seeded(31);
+        // Positive terms make truncation bias visible.
+        let terms: Vec<f64> = (0..2000).map(|_| rng.next_f64() + 0.5).collect();
+        let want = exact_sum(&terms);
+        let rne = sequential_sum(&terms, fmt, Rounding::NearestEven);
+        let trunc = sequential_sum(&terms, fmt, Rounding::TowardZero);
+        assert!((rne - want).abs() <= (trunc - want).abs());
+    }
+
+    #[test]
+    fn sums_are_scale_invariant() {
+        // Exact binary scaling of every term scales every partial sum
+        // exactly — sequential, chunked and pairwise results all scale
+        // with it (the simulator-level counterpart of the VRR's
+        // σ_p-independence).
+        let mut rng = Pcg64::seeded(77);
+        let terms: Vec<f64> = (0..1500).map(|_| rng.normal()).collect();
+        let scaled: Vec<f64> = terms.iter().map(|t| t * 2f64.powi(5)).collect();
+        let fmt = FpFormat::accumulator(6);
+        assert_eq!(
+            sequential_sum(&scaled, fmt, MODE),
+            sequential_sum(&terms, fmt, MODE) * 32.0
+        );
+        assert_eq!(
+            chunked_sum(&scaled, 64, fmt, MODE),
+            chunked_sum(&terms, 64, fmt, MODE) * 32.0
+        );
+        assert_eq!(
+            pairwise_sum(&scaled, fmt, MODE),
+            pairwise_sum(&terms, fmt, MODE) * 32.0
+        );
+    }
+
+    #[test]
+    fn chunked_is_permutation_sensitive_but_bounded() {
+        // Reduced-precision accumulation is order-dependent (that is the
+        // whole point), but any order's result stays within the coarse
+        // envelope of the exact sum ± n·(worst per-step rounding).
+        let mut rng = Pcg64::seeded(31);
+        let mut terms: Vec<f64> = (0..4096).map(|_| rng.normal()).collect();
+        let fmt = FpFormat::accumulator(8);
+        let a = chunked_sum(&terms, 64, fmt, MODE);
+        rng.shuffle(&mut terms);
+        let b = chunked_sum(&terms, 64, fmt, MODE);
+        let exact = exact_sum(&terms);
+        // Same ensemble statistics: both orders land in the same ballpark.
+        let envelope = 4096.0 * 2f64.powi(-8) * 8.0 + exact.abs();
+        assert!((a - exact).abs() < envelope, "a={a} exact={exact}");
+        assert!((b - exact).abs() < envelope, "b={b} exact={exact}");
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let fmt = FpFormat::accumulator(8);
+        assert_eq!(sequential_sum(&[], fmt, MODE), 0.0);
+        assert_eq!(chunked_sum(&[], 64, fmt, MODE), 0.0);
+        assert_eq!(pairwise_sum(&[], fmt, MODE), 0.0);
+        assert_eq!(sequential_sum(&[2.5], fmt, MODE), 2.5);
+        assert_eq!(pairwise_sum(&[2.5], fmt, MODE), 2.5);
+    }
+}

@@ -1,0 +1,155 @@
+//! Reduced-precision arithmetic: multiply and add with rounding to a
+//! target format after every operation, exactly as a narrow hardware MAC
+//! unit behaves.
+
+use super::format::FpFormat;
+use super::quant::{quantize, Rounding};
+
+/// A reduced-precision arithmetic context: the accumulator format, the
+/// product format, and the rounding mode.
+#[derive(Clone, Copy, Debug)]
+pub struct RpArith {
+    /// Format of partial sums (the accumulator register).
+    pub acc: FpFormat,
+    /// Format of the product terms entering the accumulation.
+    pub prod: FpFormat,
+    pub mode: Rounding,
+}
+
+impl RpArith {
+    pub fn new(acc: FpFormat, prod: FpFormat) -> Self {
+        RpArith {
+            acc,
+            prod,
+            mode: Rounding::NearestEven,
+        }
+    }
+
+    /// The paper's standard configuration: inputs are (1,5,2) so products
+    /// carry `m_p = 5` mantissa bits; accumulator is `(1,6,m_acc)`.
+    pub fn paper(m_acc: u32) -> Self {
+        RpArith::new(FpFormat::accumulator(m_acc), FpFormat::PROD_FP8)
+    }
+
+    /// Multiply two (already representation-quantized) operands and round
+    /// the product to the product format.
+    ///
+    /// For the paper's (1,5,2) inputs the product is *exact* in
+    /// `m_p = 2·2+1 = 5` bits, so this rounding is a no-op there — but the
+    /// general path matters for ablations with wider inputs.
+    #[inline]
+    pub fn mul(&self, a: f64, b: f64) -> f64 {
+        quantize(a * b, self.prod, self.mode)
+    }
+
+    /// Add a product term into the running partial sum, rounding the
+    /// result to the accumulator format. This is where swamping happens:
+    /// when `|s| >> |p|`, the aligned mantissa bits of `p` fall below the
+    /// accumulator quantum and are (partially or fully) lost.
+    #[inline]
+    pub fn add(&self, s: f64, p: f64) -> f64 {
+        quantize(s + p, self.acc, self.mode)
+    }
+
+    /// Fused multiply-accumulate as the paper's modified GEMM performs it:
+    /// round the product to `m_p`, then round the sum to `m_acc`.
+    #[inline]
+    pub fn mac(&self, s: f64, a: f64, b: f64) -> f64 {
+        self.add(s, self.mul(a, b))
+    }
+}
+
+/// Does adding `p` into `s` fully swamp `p`? (paper §4 definition (1):
+/// `|s| > 2^{m_acc} · |p|` — `p` contributes nothing to the rounded sum.)
+pub fn fully_swamps(s: f64, p: f64, m_acc: u32) -> bool {
+    p != 0.0 && s.abs() > 2f64.powi(m_acc as i32) * p.abs()
+}
+
+/// Does adding `p` into `s` *partially* swamp `p`? (definition (2):
+/// `2^{m_acc-m_p}·|p| < |s| ≤ 2^{m_acc}·|p|` — some low-order bits of `p`
+/// are shifted out.)
+pub fn partially_swamps(s: f64, p: f64, m_acc: u32, m_p: u32) -> bool {
+    if p == 0.0 {
+        return false;
+    }
+    let lo = 2f64.powi((m_acc - m_p) as i32) * p.abs();
+    let hi = 2f64.powi(m_acc as i32) * p.abs();
+    s.abs() > lo && s.abs() <= hi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn product_of_fp8_operands_is_exact() {
+        // Every pair of (1,5,2) values multiplies exactly into (1,6,5).
+        let ar = RpArith::paper(12);
+        let mantissas = [1.0, 1.25, 1.5, 1.75];
+        for &ma in &mantissas {
+            for &mb in &mantissas {
+                for ea in -3..4 {
+                    for eb in -3..4 {
+                        let a = ma * 2f64.powi(ea);
+                        let b = mb * 2f64.powi(eb);
+                        assert_eq!(ar.mul(a, b), a * b);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn full_swamping_drops_small_addend() {
+        // m_acc = 4: quantum at |s|=2^10 is 2^6; adding 1.0 (< half
+        // quantum) leaves s unchanged.
+        let ar = RpArith::new(FpFormat::accumulator(4), FpFormat::PROD_FP8);
+        let s = 1024.0;
+        assert_eq!(ar.add(s, 1.0), s);
+        assert!(fully_swamps(s, 1.0, 4));
+    }
+
+    #[test]
+    fn partial_swamping_keeps_high_bits() {
+        // m_acc = 6, m_p = 5: s = 64.0, p = 1.03125 (= 1 + 2^-5, exact in
+        // m_p=5). Quantum at 64 is 2^0 = 1 for m_acc=6... s+p = 65.03125 →
+        // rounds to 65.0: the 2^-5 tail is lost (partial swamping), the
+        // leading 1 survives.
+        let ar = RpArith::new(FpFormat::accumulator(6), FpFormat::PROD_FP8);
+        let s = 64.0;
+        let p = 1.0 + 2f64.powi(-5);
+        let r = ar.add(s, p);
+        assert_eq!(r, 65.0);
+        assert!(partially_swamps(s, p, 6, 5));
+        assert!(!fully_swamps(s, p, 6));
+    }
+
+    #[test]
+    fn swamping_predicates_partition() {
+        // A (s, p) pair cannot be both fully and partially swamping.
+        for e in 0..20 {
+            let s = 2f64.powi(e);
+            let p = 1.0;
+            let full = fully_swamps(s, p, 8);
+            let part = partially_swamps(s, p, 8, 5);
+            assert!(!(full && part), "e={e}");
+        }
+    }
+
+    #[test]
+    fn mac_matches_manual_sequence() {
+        let ar = RpArith::paper(8);
+        let s = 3.5;
+        let (a, b) = (1.25, 1.5);
+        assert_eq!(ar.mac(s, a, b), ar.add(s, ar.mul(a, b)));
+    }
+
+    #[test]
+    fn wide_accumulator_is_transparent_for_small_sums() {
+        // With m_acc = 23 and values well inside range, reduced-precision
+        // addition agrees with f32-exactness for representable operands.
+        let ar = RpArith::new(FpFormat::new(8, 23), FpFormat::new(8, 23));
+        assert_eq!(ar.add(0.5, 0.25), 0.75);
+        assert_eq!(ar.add(1.0, 2f64.powi(-23)), 1.0 + 2f64.powi(-23));
+    }
+}

@@ -1,0 +1,149 @@
+//! Floating-point format descriptors.
+//!
+//! A `(1, e, m)` format (paper §2) has one sign bit, `e` exponent bits and
+//! `m` mantissa bits. The exponent convention follows IEEE-754: bias
+//! `2^{e-1}-1`, all-ones exponent reserved for infinities/NaN, gradual
+//! underflow (subnormals) below `E_min = 2 - bias`.
+
+/// A custom floating-point format `(1, e, m)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FpFormat {
+    /// Exponent bits.
+    pub exp_bits: u32,
+    /// Mantissa (fraction) bits, excluding the hidden leading one.
+    pub man_bits: u32,
+}
+
+impl FpFormat {
+    pub const fn new(exp_bits: u32, man_bits: u32) -> Self {
+        FpFormat { exp_bits, man_bits }
+    }
+
+    /// IEEE binary32.
+    pub const FP32: FpFormat = FpFormat::new(8, 23);
+    /// IEEE binary16.
+    pub const FP16: FpFormat = FpFormat::new(5, 10);
+    /// bfloat16.
+    pub const BF16: FpFormat = FpFormat::new(8, 7);
+    /// The paper's representation format for weights/activations/gradients:
+    /// (1,5,2) — Wang et al. (2018) FP8.
+    pub const FP8_152: FpFormat = FpFormat::new(5, 2);
+    /// (1,6,5): the exact product of two (1,5,2) values (mantissa
+    /// `1.m × 1.m` needs 2+2+1 = 5 bits; exponent range doubles).
+    pub const PROD_FP8: FpFormat = FpFormat::new(6, 5);
+
+    /// The paper's accumulator format: 6 exponent bits (§5: "we use 6-b of
+    /// exponents in the accumulations") and a swept mantissa width.
+    pub const fn accumulator(man_bits: u32) -> FpFormat {
+        FpFormat::new(6, man_bits)
+    }
+
+    /// Total storage width `1 + e + m`.
+    pub const fn bits(&self) -> u32 {
+        1 + self.exp_bits + self.man_bits
+    }
+
+    /// Exponent bias `2^{e-1} - 1`.
+    pub const fn bias(&self) -> i32 {
+        (1 << (self.exp_bits - 1)) - 1
+    }
+
+    /// Largest unbiased exponent of a normal number (all-ones reserved).
+    pub const fn e_max(&self) -> i32 {
+        self.bias()
+    }
+
+    /// Smallest unbiased exponent of a normal number.
+    pub const fn e_min(&self) -> i32 {
+        1 - self.bias()
+    }
+
+    /// Largest finite value: `(2 - 2^-m) · 2^{e_max}`.
+    ///
+    /// Constructed directly from bits (exponent field `e_max`, top `m`
+    /// mantissa bits set) — this sits on the `quantize` hot path.
+    pub fn max_finite(&self) -> f64 {
+        if self.man_bits >= 52 {
+            // Wide "ideal" simulation formats: effectively unbounded.
+            return f64::MAX;
+        }
+        let e_field = (self.e_max() + 1023) as u64;
+        let mant = ((1u64 << self.man_bits) - 1) << (52 - self.man_bits);
+        f64::from_bits((e_field << 52) | mant)
+    }
+
+    /// Smallest positive normal value `2^{e_min}`.
+    pub fn min_normal(&self) -> f64 {
+        2f64.powi(self.e_min())
+    }
+
+    /// Smallest positive subnormal value `2^{e_min - m}`.
+    pub fn min_subnormal(&self) -> f64 {
+        2f64.powi(self.e_min() - self.man_bits as i32)
+    }
+
+    /// Unit roundoff `2^{-(m+1)}` (half ulp of 1.0).
+    pub fn unit_roundoff(&self) -> f64 {
+        (0.5f64).powi(self.man_bits as i32 + 1)
+    }
+
+    /// Human-readable `(1,e,m)` notation used throughout the paper.
+    pub fn notation(&self) -> String {
+        format!("(1,{},{})", self.exp_bits, self.man_bits)
+    }
+}
+
+impl std::fmt::Display for FpFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.notation())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp32_constants_match_ieee() {
+        let f = FpFormat::FP32;
+        assert_eq!(f.bits(), 32);
+        assert_eq!(f.bias(), 127);
+        assert_eq!(f.e_max(), 127);
+        assert_eq!(f.e_min(), -126);
+        assert_eq!(f.max_finite(), f32::MAX as f64);
+        assert_eq!(f.min_normal(), f32::MIN_POSITIVE as f64);
+    }
+
+    #[test]
+    fn fp16_constants_match_ieee() {
+        let f = FpFormat::FP16;
+        assert_eq!(f.bits(), 16);
+        assert_eq!(f.bias(), 15);
+        assert_eq!(f.max_finite(), 65504.0);
+        assert_eq!(f.min_normal(), 2f64.powi(-14));
+        assert_eq!(f.min_subnormal(), 2f64.powi(-24));
+    }
+
+    #[test]
+    fn fp8_152_shape() {
+        let f = FpFormat::FP8_152;
+        assert_eq!(f.bits(), 8);
+        assert_eq!(f.bias(), 15);
+        // max = 1.75 * 2^15 = 57344
+        assert_eq!(f.max_finite(), 57344.0);
+    }
+
+    #[test]
+    fn accumulator_uses_six_exponent_bits() {
+        let f = FpFormat::accumulator(12);
+        assert_eq!(f.exp_bits, 6);
+        assert_eq!(f.man_bits, 12);
+        assert_eq!(f.bias(), 31);
+    }
+
+    #[test]
+    fn notation_formats() {
+        assert_eq!(FpFormat::FP8_152.notation(), "(1,5,2)");
+        assert_eq!(FpFormat::accumulator(9).to_string(), "(1,6,9)");
+    }
+}

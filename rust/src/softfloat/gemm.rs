@@ -1,0 +1,351 @@
+//! Reduced-precision GEMM — the software model of the paper's modified
+//! CUDA GEMM: inputs quantized to the representation format (1,5,2),
+//! products formed exactly in `m_p = 5` bits, and every partial sum
+//! rounded to the `(1,6,m_acc)` accumulator format, optionally with
+//! two-level chunked accumulation.
+
+use super::accumulate::{chunked_sum, sequential_sum};
+use super::arith::RpArith;
+use super::format::FpFormat;
+use super::quant::{quantize, Rounding};
+use super::tensor::Tensor;
+
+/// Configuration of a reduced-precision GEMM.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmConfig {
+    /// Representation format applied to the *inputs* (None = keep f32).
+    pub repr: Option<FpFormat>,
+    /// Product-term format (`m_p`).
+    pub prod: FpFormat,
+    /// Accumulator format (`m_acc`).
+    pub acc: FpFormat,
+    /// Chunk size for two-level accumulation; `None` = plain sequential.
+    pub chunk: Option<usize>,
+    pub mode: Rounding,
+}
+
+impl GemmConfig {
+    /// Paper configuration: (1,5,2) inputs, exact 5-bit products,
+    /// `(1,6,m_acc)` partial sums, optional chunk-64 accumulation.
+    pub fn paper(m_acc: u32, chunk: Option<usize>) -> GemmConfig {
+        GemmConfig {
+            repr: Some(FpFormat::FP8_152),
+            prod: FpFormat::PROD_FP8,
+            acc: FpFormat::accumulator(m_acc),
+            chunk,
+            mode: Rounding::NearestEven,
+        }
+    }
+
+    /// Full-precision baseline (no quantization anywhere) — the paper's
+    /// "accumulation in full precision" control arm.
+    pub fn baseline() -> GemmConfig {
+        GemmConfig {
+            repr: None,
+            prod: FpFormat::new(11, 52),
+            acc: FpFormat::new(11, 52),
+            chunk: None,
+            mode: Rounding::NearestEven,
+        }
+    }
+
+    pub fn arith(&self) -> RpArith {
+        RpArith {
+            acc: self.acc,
+            prod: self.prod,
+            mode: self.mode,
+        }
+    }
+}
+
+/// One reduced-precision dot product over pre-quantized operand slices.
+///
+/// `a` strided by `sa`, `b` strided by `sb`, length `k`. Products are
+/// rounded to `cfg.prod`, partial sums to `cfg.acc` (sequential or
+/// chunked). This is the exact inner loop the VRR analysis models.
+pub fn rp_dot(
+    a: &[f32],
+    sa: usize,
+    b: &[f32],
+    sb: usize,
+    k: usize,
+    cfg: &GemmConfig,
+) -> f64 {
+    // Materialize the product terms first (each rounded to m_p), then run
+    // the chosen accumulation algorithm over them.
+    let mut prods: Vec<f64> = Vec::with_capacity(k);
+    for l in 0..k {
+        let p = a[l * sa] as f64 * b[l * sb] as f64;
+        prods.push(quantize(p, cfg.prod, cfg.mode));
+    }
+    match cfg.chunk {
+        Some(c) => chunked_sum(&prods, c, cfg.acc, cfg.mode),
+        None => sequential_sum(&prods, cfg.acc, cfg.mode),
+    }
+}
+
+/// Reduced-precision GEMM, `C = A·B`, `A: [m,k]`, `B: [k,n]`.
+///
+/// Inputs are first quantized to the representation format (if any); each
+/// output element is an independent length-`k` reduced-precision
+/// accumulation — matching how a systolic/SIMT GEMM partitions work, and
+/// matching Assumption 1's per-dot-product view.
+pub fn rp_gemm(a: &Tensor, b: &Tensor, cfg: &GemmConfig) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "inner dims mismatch: {k} vs {k2}");
+
+    // Representation quantization of the operands (the paper's (1,5,2)).
+    let (aq, bq);
+    let (a, b) = match cfg.repr {
+        Some(fmt) => {
+            aq = a.map(|x| quantize(x as f64, fmt, cfg.mode) as f32);
+            bq = b.map(|x| quantize(x as f64, fmt, cfg.mode) as f32);
+            (&aq, &bq)
+        }
+        None => (a, b),
+    };
+
+    let mut out = Tensor::zeros(&[m, n]);
+    // One scratch buffer for the product terms of every dot (hot loop:
+    // no per-dot allocation), and a transposed copy of B for contiguous
+    // column access.
+    let bt = b.t();
+    let mut prods = vec![0.0f64; k];
+    for i in 0..m {
+        let row = &a.data[i * k..(i + 1) * k];
+        for j in 0..n {
+            let col = &bt.data[j * k..(j + 1) * k];
+            for l in 0..k {
+                prods[l] = quantize(row[l] as f64 * col[l] as f64, cfg.prod, cfg.mode);
+            }
+            let s = match cfg.chunk {
+                Some(c) => chunked_sum(&prods, c, cfg.acc, cfg.mode),
+                None => sequential_sum(&prods, cfg.acc, cfg.mode),
+            };
+            out.data[i * n + j] = s as f32;
+        }
+    }
+    out
+}
+
+/// MXU-style chunked dot product — the exact semantics of the Pallas
+/// kernel (python/compile/kernels/rp_gemm.py): each chunk's partial sum
+/// is computed *exactly* (the hardware chunk adder tree / MXU pass),
+/// rounded once to the accumulator format, and folded into a running
+/// accumulator that is re-rounded after every chunk. Inputs are
+/// representation-quantized to (1,5,2) first when `repr` is set.
+///
+/// This is the function the cross-language artifact test pins against
+/// the executed HLO (rust/tests/aot_runtime.rs).
+pub fn rp_dot_mxu(a: &[f32], b_col: &[f32], cfg: &GemmConfig, chunk: usize) -> f64 {
+    assert_eq!(a.len(), b_col.len());
+    let quant_in = |x: f32| match cfg.repr {
+        Some(fmt) => quantize(x as f64, fmt, cfg.mode),
+        None => x as f64,
+    };
+    let mut acc = 0.0f64;
+    for block in a.chunks(chunk).zip(b_col.chunks(chunk)) {
+        let (ab, bb) = block;
+        // Exact intra-chunk sum of exact products (f64 holds both).
+        let mut s = 0.0f64;
+        for (&x, &y) in ab.iter().zip(bb) {
+            s += quant_in(x) * quant_in(y);
+        }
+        let s = quantize(s, cfg.acc, cfg.mode);
+        acc = quantize(acc + s, cfg.acc, cfg.mode);
+    }
+    acc
+}
+
+/// MXU-style reduced-precision GEMM (the Pallas kernel's semantics).
+pub fn rp_gemm_mxu(a: &Tensor, b: &Tensor, cfg: &GemmConfig, chunk: usize) -> Tensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let n = b.shape[1];
+    assert_eq!(k, b.shape[0]);
+    let bt = b.t();
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let row = &a.data[i * k..(i + 1) * k];
+        for j in 0..n {
+            let col = &bt.data[j * k..(j + 1) * k];
+            out.data[i * n + j] = rp_dot_mxu(row, col, cfg, chunk) as f32;
+        }
+    }
+    out
+}
+
+/// Measured fraction of non-zero product terms in `A·B` — the empirical
+/// NZR (paper §4.3) for a GEMM's accumulations.
+pub fn gemm_nzr(a: &Tensor, b: &Tensor) -> f64 {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let n = b.shape[1];
+    let mut nonzero = 0usize;
+    let mut total = 0usize;
+    for i in 0..m {
+        for j in 0..n {
+            for l in 0..k {
+                total += 1;
+                if a.data[i * k + l] != 0.0 && b.data[l * n + j] != 0.0 {
+                    nonzero += 1;
+                }
+            }
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        nonzero as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn baseline_matches_f64_matmul() {
+        let mut rng = Pcg64::seeded(1);
+        let a = Tensor::randn(&[5, 32], 1.0, &mut rng);
+        let b = Tensor::randn(&[32, 4], 1.0, &mut rng);
+        let c = rp_gemm(&a, &b, &GemmConfig::baseline());
+        let want = a.matmul(&b);
+        for (x, y) in c.data.iter().zip(&want.data) {
+            assert!((x - y).abs() <= 1e-5 * y.abs().max(1.0), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn wide_accumulator_close_to_baseline() {
+        let mut rng = Pcg64::seeded(2);
+        let a = Tensor::randn(&[4, 256], 0.2, &mut rng);
+        let b = Tensor::randn(&[256, 4], 0.2, &mut rng);
+        // m_acc=23 is "wide" for n=256 — only representation error remains.
+        let c = rp_gemm(&a, &b, &GemmConfig::paper(23, None));
+        let mut cfg8 = GemmConfig::paper(23, None);
+        cfg8.acc = FpFormat::new(11, 52); // ideal accumulator, same repr
+        let want = rp_gemm(&a, &b, &cfg8);
+        for (x, y) in c.data.iter().zip(&want.data) {
+            assert!((x - y).abs() <= 2e-2 * y.abs().max(0.5), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn narrow_accumulator_loses_variance_on_long_dots() {
+        // The headline effect: long accumulation + small m_acc shrinks the
+        // output ensemble variance (paper §3).
+        let mut rng = Pcg64::seeded(3);
+        let k = 8192;
+        let a = Tensor::randn(&[8, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, 8], 1.0, &mut rng);
+        let ideal = rp_gemm(&a, &b, &{
+            let mut c = GemmConfig::paper(30, None);
+            c.acc = FpFormat::new(11, 52);
+            c
+        });
+        let narrow = rp_gemm(&a, &b, &GemmConfig::paper(4, None));
+        let vi = ideal.variance();
+        let vn = narrow.variance();
+        assert!(
+            vn < 0.8 * vi,
+            "expected variance loss: narrow {vn} vs ideal {vi}"
+        );
+    }
+
+    #[test]
+    fn chunking_recovers_variance() {
+        let mut rng = Pcg64::seeded(4);
+        let k = 8192;
+        let a = Tensor::randn(&[8, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, 8], 1.0, &mut rng);
+        let narrow = rp_gemm(&a, &b, &GemmConfig::paper(6, None));
+        let chunked = rp_gemm(&a, &b, &GemmConfig::paper(6, Some(64)));
+        let ideal = rp_gemm(&a, &b, &{
+            let mut c = GemmConfig::paper(30, None);
+            c.acc = FpFormat::new(11, 52);
+            c
+        });
+        let (vn, vc, vi) = (narrow.variance(), chunked.variance(), ideal.variance());
+        assert!(vc > vn, "chunked {vc} should retain more than seq {vn}");
+        assert!(vc > 0.8 * vi, "chunked {vc} should approach ideal {vi}");
+    }
+
+    #[test]
+    fn gemm_nzr_dense_is_one() {
+        let mut rng = Pcg64::seeded(5);
+        let a = Tensor::randn(&[3, 7], 1.0, &mut rng);
+        let b = Tensor::randn(&[7, 2], 1.0, &mut rng);
+        assert_eq!(gemm_nzr(&a, &b), 1.0);
+    }
+
+    #[test]
+    fn gemm_nzr_tracks_sparsity() {
+        let mut rng = Pcg64::seeded(6);
+        let mut a = Tensor::randn(&[16, 64], 1.0, &mut rng);
+        let b = Tensor::randn(&[64, 16], 1.0, &mut rng);
+        // ReLU-like: zero out negatives in A → NZR ≈ 0.5.
+        for x in a.data.iter_mut() {
+            if *x < 0.0 {
+                *x = 0.0;
+            }
+        }
+        let nzr = gemm_nzr(&a, &b);
+        assert!((nzr - 0.5).abs() < 0.1, "nzr={nzr}");
+    }
+
+    #[test]
+    fn mxu_single_chunk_is_one_rounding() {
+        // chunk ≥ K: exact dot + one rounding (+ the identity inter-chunk
+        // fold, which re-rounds an already representable value).
+        let mut rng = Pcg64::seeded(9);
+        let a = Tensor::randn(&[2, 48], 0.5, &mut rng);
+        let b = Tensor::randn(&[48, 2], 0.5, &mut rng);
+        let cfg = GemmConfig::paper(8, None);
+        let out = rp_gemm_mxu(&a, &b, &cfg, 48);
+        let bt = b.t();
+        for i in 0..2 {
+            for j in 0..2 {
+                let exact: f64 = (0..48)
+                    .map(|l| {
+                        quantize(a.at2(i, l) as f64, FpFormat::FP8_152, cfg.mode)
+                            * quantize(bt.at2(j, l) as f64, FpFormat::FP8_152, cfg.mode)
+                    })
+                    .sum();
+                let want = quantize(exact, cfg.acc, cfg.mode) as f32;
+                assert_eq!(out.at2(i, j), want);
+            }
+        }
+    }
+
+    #[test]
+    fn mxu_retains_more_than_sequential() {
+        // Wide intra-chunk adders (MXU semantics) lose no variance inside
+        // a chunk, so for the same m_acc they retain at least as much as
+        // the per-MAC sequential path.
+        let mut rng = Pcg64::seeded(10);
+        let k = 4096;
+        let a = Tensor::randn(&[6, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, 6], 1.0, &mut rng);
+        let seq = rp_gemm(&a, &b, &GemmConfig::paper(5, None));
+        let mxu = rp_gemm_mxu(&a, &b, &GemmConfig::paper(5, None), 64);
+        assert!(mxu.variance() > seq.variance());
+    }
+
+    #[test]
+    fn rp_dot_strided_access() {
+        // B column access uses stride n — verify against a transposed copy.
+        let mut rng = Pcg64::seeded(7);
+        let a = Tensor::randn(&[1, 33], 0.5, &mut rng);
+        let b = Tensor::randn(&[33, 5], 0.5, &mut rng);
+        let bt = b.t();
+        let cfg = GemmConfig::paper(12, None);
+        for j in 0..5 {
+            let strided = rp_dot(&a.data, 1, &b.data[j..], 5, 33, &cfg);
+            let contig = rp_dot(&a.data, 1, &bt.data[j * 33..], 1, 33, &cfg);
+            assert_eq!(strided, contig);
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Bit-accurate simulation of custom reduced-precision floating-point.
+//!
+//! The paper's experiments modify the GEMM inner loop so every partial sum
+//! is rounded to an `(1, e, m_acc)` floating-point value — the hardware
+//! behaviour of a reduced-width accumulator. This module is the software
+//! stand-in for that hardware: a *fake-quantization* simulator that keeps
+//! values in `f64` but rounds the mantissa to `m` bits (and clamps the
+//! exponent to `e` bits) after every arithmetic operation.
+//!
+//! Exactness argument (see DESIGN.md §7): every `(1,e,m)` value with
+//! `m ≤ 23` is exactly representable in `f64`; products of two `m_p`-bit
+//! mantissas need `2·m_p+1 ≤ 53` bits; sums round at most once below the
+//! target quantum. The simulator therefore reproduces the swamping
+//! behaviour of real narrow accumulators bit-for-bit for every format the
+//! paper studies.
+
+pub mod accumulate;
+pub mod arith;
+pub mod format;
+pub mod gemm;
+pub mod quant;
+pub mod tensor;
+pub mod value;
+
+pub use accumulate::{chunked_sum, pairwise_sum, sequential_sum, Accumulator};
+pub use format::FpFormat;
+pub use gemm::{rp_gemm, GemmConfig};
+pub use quant::{quantize, Rounding};
+pub use tensor::Tensor;

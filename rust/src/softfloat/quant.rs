@@ -1,0 +1,291 @@
+//! Fake-quantization: round an `f64` to the nearest value representable in
+//! a target `(1,e,m)` format.
+//!
+//! This is the primitive the whole simulator is built on — applied after
+//! every multiply and every partial-sum addition it reproduces the
+//! behaviour of narrow hardware datapaths, including the *swamping*
+//! phenomenon the paper analyzes (large `|s_i|` causing the low-order bits
+//! of an incoming product term to be shifted out and truncated).
+
+use super::format::FpFormat;
+
+/// Rounding mode applied to the mantissa.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum Rounding {
+    /// Round to nearest, ties to even — IEEE default, and what the paper's
+    /// modified CUDA GEMM implements.
+    #[default]
+    NearestEven,
+    /// Truncation toward zero — the classical "chopping" accumulator,
+    /// matching the bit-discard picture of paper Figure 4.
+    TowardZero,
+}
+
+/// Quantize `x` to the format `fmt` under rounding mode `mode`.
+///
+/// Semantics:
+/// * exact zero, NaN and ±∞ pass through;
+/// * overflow beyond `max_finite` saturates to ±∞ (IEEE RNE behaviour for
+///   values ≥ the overflow threshold; the trainer treats ∞ as divergence);
+/// * gradual underflow: below `2^{e_min}` the quantum freezes at
+///   `2^{e_min-m}` (subnormals), below half the smallest subnormal the
+///   value flushes to ±0.
+pub fn quantize(x: f64, fmt: FpFormat, mode: Rounding) -> f64 {
+    if x == 0.0 || !x.is_finite() {
+        return x;
+    }
+    // Quantizing to a format at least as wide as f64 itself is an
+    // identity on finite f64 values (the baseline/ideal configuration).
+    if fmt.man_bits >= 52 {
+        return x;
+    }
+    let m = fmt.man_bits as i32;
+    // Unbiased exponent of |x| via bit inspection (exact, unlike log2).
+    let bits = x.abs().to_bits();
+    let raw_exp = ((bits >> 52) & 0x7ff) as i32;
+    let e = if raw_exp == 0 {
+        // f64-subnormal input (astronomically below any format we simulate).
+        -1074 + (63 - (bits.leading_zeros() as i32)) // exponent of leading bit
+    } else {
+        raw_exp - 1023
+    };
+
+    // Quantum: 2^(e-m) for normals, frozen at 2^(e_min-m) in the subnormal
+    // range of the target format.
+    let q_exp = if e < fmt.e_min() {
+        fmt.e_min() - m
+    } else {
+        e - m
+    };
+    // 2^±q_exp as exact bit patterns — every format we simulate keeps
+    // q_exp well inside f64's normal exponent range (hot path: avoids
+    // powi and the division).
+    debug_assert!((-1022..=1022).contains(&q_exp));
+    let quantum = f64::from_bits(((q_exp + 1023) as u64) << 52);
+    let inv_quantum = f64::from_bits(((-q_exp + 1023) as u64) << 52);
+    let scaled = x * inv_quantum;
+    let rounded = match mode {
+        Rounding::NearestEven => scaled.round_ties_even(),
+        Rounding::TowardZero => scaled.trunc(),
+    };
+    let y = rounded * quantum;
+
+    // Overflow handling (the rounding may also have bumped into the next
+    // binade, possibly crossing e_max).
+    let max = fmt.max_finite();
+    if y.abs() > max {
+        match mode {
+            Rounding::NearestEven => {
+                // IEEE: round-to-nearest overflows to ∞ once past the
+                // midpoint between max_finite and the next (unrepresentable)
+                // value; our scaled rounding already decided that.
+                return if y > 0.0 {
+                    f64::INFINITY
+                } else {
+                    f64::NEG_INFINITY
+                };
+            }
+            Rounding::TowardZero => {
+                return if y > 0.0 { max } else { -max };
+            }
+        }
+    }
+    y
+}
+
+/// Quantize with round-to-nearest-even (the common case).
+#[inline]
+pub fn quantize_rne(x: f64, fmt: FpFormat) -> f64 {
+    quantize(x, fmt, Rounding::NearestEven)
+}
+
+/// Quantize every element of a slice in place.
+pub fn quantize_slice(xs: &mut [f64], fmt: FpFormat, mode: Rounding) {
+    for x in xs.iter_mut() {
+        *x = quantize(*x, fmt, mode);
+    }
+}
+
+/// Quantize an `f32` tensor's values (used to produce (1,5,2) operands).
+pub fn quantize_f32(xs: &mut [f32], fmt: FpFormat, mode: Rounding) {
+    for x in xs.iter_mut() {
+        *x = quantize(*x as f64, fmt, mode) as f32;
+    }
+}
+
+/// True iff `x` is exactly representable in `fmt`.
+pub fn is_representable(x: f64, fmt: FpFormat) -> bool {
+    quantize(x, fmt, Rounding::NearestEven) == x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    const FP8: FpFormat = FpFormat::FP8_152;
+
+    #[test]
+    fn exact_values_pass_through() {
+        for fmt in [FpFormat::FP32, FpFormat::FP16, FP8, FpFormat::accumulator(9)] {
+            for v in [0.0, 1.0, -1.5, 0.25, 2.0_f64.powi(fmt.e_min())] {
+                assert_eq!(quantize(v, fmt, Rounding::NearestEven), v, "{fmt} {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn rne_ties_to_even() {
+        // (1,5,2): representable mantissas at 1.00, 1.25, 1.50, 1.75.
+        // 1.125 is exactly halfway between 1.0 and 1.25 → ties to even (1.0,
+        // mantissa bits 00). 1.375 halfway between 1.25 and 1.5 → 1.5
+        // (mantissa 10 is even vs 01 odd).
+        assert_eq!(quantize(1.125, FP8, Rounding::NearestEven), 1.0);
+        assert_eq!(quantize(1.375, FP8, Rounding::NearestEven), 1.5);
+        assert_eq!(quantize(-1.125, FP8, Rounding::NearestEven), -1.0);
+    }
+
+    #[test]
+    fn truncation_chops_toward_zero() {
+        assert_eq!(quantize(1.24, FP8, Rounding::TowardZero), 1.0);
+        assert_eq!(quantize(-1.24, FP8, Rounding::TowardZero), -1.0);
+        assert_eq!(quantize(1.999, FP8, Rounding::TowardZero), 1.75);
+    }
+
+    #[test]
+    fn rounding_crosses_binade() {
+        // 1.97 rounds up to 2.0 (next binade) in (1,5,2).
+        assert_eq!(quantize(1.97, FP8, Rounding::NearestEven), 2.0);
+    }
+
+    #[test]
+    fn overflow_saturates_to_infinity() {
+        let max = FP8.max_finite(); // 57344
+        assert_eq!(quantize(max, FP8, Rounding::NearestEven), max);
+        assert_eq!(
+            quantize(max * 1.26, FP8, Rounding::NearestEven),
+            f64::INFINITY
+        );
+        assert_eq!(quantize(max * 1.26, FP8, Rounding::TowardZero), max);
+        assert_eq!(
+            quantize(-max * 2.0, FP8, Rounding::NearestEven),
+            f64::NEG_INFINITY
+        );
+    }
+
+    #[test]
+    fn subnormal_range_and_flush() {
+        let fmt = FpFormat::FP16;
+        let min_sub = fmt.min_subnormal(); // 2^-24
+        assert_eq!(quantize(min_sub, fmt, Rounding::NearestEven), min_sub);
+        // 0.4 × min_sub rounds to zero; 0.6 × min_sub rounds to min_sub.
+        assert_eq!(quantize(0.4 * min_sub, fmt, Rounding::NearestEven), 0.0);
+        assert_eq!(
+            quantize(0.6 * min_sub, fmt, Rounding::NearestEven),
+            min_sub
+        );
+        // Subnormal spacing is uniform at min_sub: integer multiples are
+        // representable, halfway points tie to even.
+        assert_eq!(
+            quantize(3.0 * min_sub, fmt, Rounding::NearestEven),
+            3.0 * min_sub
+        );
+        assert_eq!(
+            quantize(3.5 * min_sub, fmt, Rounding::NearestEven),
+            4.0 * min_sub // tie between 3 and 4 → even (4)
+        );
+    }
+
+    #[test]
+    fn matches_f32_hardware_rounding() {
+        // Quantizing to (1,8,23) must agree exactly with the hardware f32
+        // cast for a large random sample — the strongest available oracle.
+        let mut rng = Pcg64::seeded(99);
+        for _ in 0..200_000 {
+            let x = rng.normal() * 2f64.powi((rng.next_below(80) as i32) - 40);
+            let ours = quantize(x, FpFormat::FP32, Rounding::NearestEven);
+            let hw = x as f32 as f64;
+            assert_eq!(ours, hw, "x={x:e}");
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut rng = Pcg64::seeded(4);
+        for fmt in [FP8, FpFormat::accumulator(7), FpFormat::FP16] {
+            for _ in 0..10_000 {
+                let x = rng.normal() * 100.0;
+                let q = quantize(x, fmt, Rounding::NearestEven);
+                assert_eq!(q, quantize(q, fmt, Rounding::NearestEven));
+            }
+        }
+    }
+
+    #[test]
+    fn monotone_nondecreasing() {
+        // Quantization must preserve order (weak monotonicity).
+        let mut rng = Pcg64::seeded(17);
+        let fmt = FpFormat::accumulator(5);
+        let mut xs: Vec<f64> = (0..5000).map(|_| rng.normal() * 10.0).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let qs: Vec<f64> = xs
+            .iter()
+            .map(|&x| quantize(x, fmt, Rounding::NearestEven))
+            .collect();
+        for w in qs.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn error_bounded_by_half_ulp() {
+        let mut rng = Pcg64::seeded(23);
+        let fmt = FpFormat::accumulator(9);
+        for _ in 0..50_000 {
+            let x = rng.normal() * 8.0;
+            if x == 0.0 {
+                continue;
+            }
+            let q = quantize(x, fmt, Rounding::NearestEven);
+            let ulp = 2f64.powi(
+                (x.abs().log2().floor() as i32).max(fmt.e_min()) - fmt.man_bits as i32,
+            );
+            assert!(
+                (q - x).abs() <= 0.5 * ulp + 1e-300,
+                "x={x} q={q} ulp={ulp}"
+            );
+        }
+    }
+
+    #[test]
+    fn scale_invariance_by_powers_of_two() {
+        // Floating-point rounding commutes with exact binary scaling as
+        // long as no range boundary is crossed: q(2^k·x) = 2^k·q(x).
+        // This is the property that makes the VRR analysis independent of
+        // σ_p — worth pinning on the simulator. Values are kept well
+        // inside the (1,6,m) normal range so no boundary is crossed.
+        let mut rng = Pcg64::seeded(41);
+        for fmt in [FpFormat::accumulator(2), FpFormat::accumulator(7), FpFormat::accumulator(12)] {
+            for _ in 0..20_000 {
+                let x = rng.normal();
+                if x.abs() < 1e-3 {
+                    continue;
+                }
+                let k = rng.next_below(13) as i32 - 6;
+                let s = 2f64.powi(k);
+                let a = quantize(x * s, fmt, Rounding::NearestEven);
+                let b = quantize(x, fmt, Rounding::NearestEven) * s;
+                assert_eq!(a, b, "fmt={fmt} x={x} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn nan_and_inf_pass_through() {
+        assert!(quantize(f64::NAN, FP8, Rounding::NearestEven).is_nan());
+        assert_eq!(
+            quantize(f64::INFINITY, FP8, Rounding::NearestEven),
+            f64::INFINITY
+        );
+    }
+}

@@ -1,0 +1,205 @@
+//! A minimal dense row-major tensor over `f32` — just enough linear
+//! algebra for the native trainer and the GEMM simulator (no ndarray in
+//! the offline environment).
+
+use crate::util::Pcg64;
+
+/// Row-major dense tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape/data mismatch"
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// He-style normal init: std = gain / sqrt(fan_in).
+    pub fn randn(shape: &[usize], std: f64, rng: &mut Pcg64) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// 2-D accessors (used pervasively by the GEMM paths).
+    #[inline]
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[r * self.shape[1] + c]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[r * self.shape[1] + c] = v;
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Transpose a 2-D tensor.
+    pub fn t(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                out.data[j * m + i] = self.data[i * n + j];
+            }
+        }
+        out
+    }
+
+    /// Exact f32 matmul (reference / baseline path), self: [m,k] × [k,n].
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "inner dims mismatch");
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for l in 0..k {
+                let a = self.data[i * k + l] as f64;
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    // f64 accumulate = the paper's "full precision" baseline.
+                    let cur = out.data[i * n + j] as f64;
+                    out.data[i * n + j] = (cur + a * other.data[l * n + j] as f64) as f32;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    /// Fraction of non-zero entries — the NZR the sparsity correction
+    /// (paper §4.3) feeds on.
+    pub fn nzr(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|&&x| x != 0.0).count() as f64 / self.data.len() as f64
+    }
+
+    /// Population variance of the entries (for Fig. 3-style snapshots).
+    pub fn variance(&self) -> f64 {
+        if self.data.is_empty() {
+            return f64::NAN;
+        }
+        let n = self.data.len() as f64;
+        let mean = self.data.iter().map(|&x| x as f64).sum::<f64>() / n;
+        self.data
+            .iter()
+            .map(|&x| (x as f64 - mean) * (x as f64 - mean))
+            .sum::<f64>()
+            / n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seeded(2);
+        let a = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg64::seeded(3);
+        let a = Tensor::randn(&[4, 4], 1.0, &mut rng);
+        let mut eye = Tensor::zeros(&[4, 4]);
+        for i in 0..4 {
+            eye.set2(i, i, 1.0);
+        }
+        let prod = a.matmul(&eye);
+        for (x, y) in prod.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn nzr_counts_zeros() {
+        let t = Tensor::from_vec(&[4], vec![0.0, 1.0, 0.0, 2.0]);
+        assert_eq!(t.nzr(), 0.5);
+    }
+
+    #[test]
+    fn variance_of_constant_is_zero() {
+        let t = Tensor::from_vec(&[3], vec![2.0, 2.0, 2.0]);
+        assert!(t.variance().abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_dim_mismatch_panics() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 2]);
+        let _ = a.matmul(&b);
+    }
+}

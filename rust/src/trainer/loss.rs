@@ -1,0 +1,122 @@
+//! Softmax cross-entropy loss with analytic gradient.
+
+use crate::softfloat::tensor::Tensor;
+
+/// Row-wise softmax (numerically stabilized by max subtraction).
+pub fn softmax(logits: &Tensor) -> Tensor {
+    assert_eq!(logits.rank(), 2);
+    let (b, c) = (logits.shape[0], logits.shape[1]);
+    let mut out = Tensor::zeros(&[b, c]);
+    for i in 0..b {
+        let row = &logits.data[i * c..(i + 1) * c];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f64;
+        for j in 0..c {
+            denom += ((row[j] - max) as f64).exp();
+        }
+        for j in 0..c {
+            out.data[i * c + j] = (((row[j] - max) as f64).exp() / denom) as f32;
+        }
+    }
+    out
+}
+
+/// Mean cross-entropy of `logits` against integer `labels`, plus the
+/// gradient w.r.t. the logits (`(softmax − onehot)/B`).
+pub fn cross_entropy(logits: &Tensor, labels: &[usize]) -> (f64, Tensor) {
+    let (b, c) = (logits.shape[0], logits.shape[1]);
+    assert_eq!(labels.len(), b);
+    let probs = softmax(logits);
+    let mut loss = 0.0f64;
+    let mut grad = probs.clone();
+    for i in 0..b {
+        let p = probs.data[i * c + labels[i]].max(1e-12);
+        loss -= (p as f64).ln();
+        grad.data[i * c + labels[i]] -= 1.0;
+    }
+    for g in grad.data.iter_mut() {
+        *g /= b as f32;
+    }
+    (loss / b as f64, grad)
+}
+
+/// Top-1 accuracy of `logits` against `labels`.
+pub fn accuracy(logits: &Tensor, labels: &[usize]) -> f64 {
+    let (b, c) = (logits.shape[0], logits.shape[1]);
+    let mut correct = 0usize;
+    for i in 0..b {
+        let row = &logits.data[i * c..(i + 1) * c];
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap();
+        if argmax == labels[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / b as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let logits = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        let p = softmax(&logits);
+        for i in 0..2 {
+            let s: f32 = p.data[i * 3..(i + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        // Monotone: bigger logit, bigger prob.
+        assert!(p.data[2] > p.data[1] && p.data[1] > p.data[0]);
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant_and_stable() {
+        let a = softmax(&Tensor::from_vec(&[1, 3], vec![1.0, 2.0, 3.0]));
+        let b = softmax(&Tensor::from_vec(&[1, 3], vec![1001.0, 1002.0, 1003.0]));
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn uniform_logits_give_ln_c_loss() {
+        let logits = Tensor::zeros(&[4, 10]);
+        let (loss, _) = cross_entropy(&logits, &[0, 3, 5, 9]);
+        assert!((loss - (10f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let logits = Tensor::from_vec(&[2, 3], vec![0.5, -0.2, 0.1, 1.0, 0.0, -1.0]);
+        let labels = [2usize, 0];
+        let (_, grad) = cross_entropy(&logits, &labels);
+        let eps = 1e-3f32;
+        for idx in 0..6 {
+            let mut plus = logits.clone();
+            plus.data[idx] += eps;
+            let mut minus = logits.clone();
+            minus.data[idx] -= eps;
+            let (lp, _) = cross_entropy(&plus, &labels);
+            let (lm, _) = cross_entropy(&minus, &labels);
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            assert!(
+                (fd - grad.data[idx] as f64).abs() < 1e-4,
+                "idx={idx}: fd {fd} vs grad {}",
+                grad.data[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn perfect_prediction_has_full_accuracy() {
+        let logits = Tensor::from_vec(&[2, 3], vec![9.0, 0.0, 0.0, 0.0, 0.0, 9.0]);
+        assert_eq!(accuracy(&logits, &[0, 2]), 1.0);
+        assert_eq!(accuracy(&logits, &[1, 1]), 0.0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Training metrics: per-step records, divergence detection, CSV/JSON
+//! export — shared by the native trainer and the PJRT runtime trainer.
+
+use crate::util::json::Json;
+
+/// One training step's scalars.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f64,
+    pub train_acc: f64,
+}
+
+/// A whole run's metrics.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub steps: Vec<StepRecord>,
+    pub test_acc: Option<f64>,
+    pub diverged: bool,
+    /// Step at which divergence was first detected.
+    pub diverged_at: Option<usize>,
+}
+
+impl RunMetrics {
+    pub fn push(&mut self, rec: StepRecord) {
+        // Divergence: non-finite loss, or loss exploding far above the
+        // chance-level ceiling after warmup.
+        if !self.diverged && (!rec.loss.is_finite() || rec.loss > 50.0) {
+            self.diverged = true;
+            self.diverged_at = Some(rec.step);
+        }
+        self.steps.push(rec);
+    }
+
+    pub fn final_loss(&self) -> Option<f64> {
+        self.steps.last().map(|r| r.loss)
+    }
+
+    /// Mean loss over the last `k` recorded steps (convergence plateau).
+    pub fn tail_loss(&self, k: usize) -> Option<f64> {
+        if self.steps.is_empty() {
+            return None;
+        }
+        let tail = &self.steps[self.steps.len().saturating_sub(k)..];
+        Some(tail.iter().map(|r| r.loss).sum::<f64>() / tail.len() as f64)
+    }
+
+    /// Mean training accuracy over the last `k` steps.
+    pub fn tail_acc(&self, k: usize) -> Option<f64> {
+        if self.steps.is_empty() {
+            return None;
+        }
+        let tail = &self.steps[self.steps.len().saturating_sub(k)..];
+        Some(tail.iter().map(|r| r.train_acc).sum::<f64>() / tail.len() as f64)
+    }
+
+    /// CSV export: `step,loss,train_acc`.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("step,loss,train_acc\n");
+        for r in &self.steps {
+            out.push_str(&format!("{},{},{}\n", r.step, r.loss, r.train_acc));
+        }
+        out
+    }
+
+    /// JSON export of the run summary plus the loss curve.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("diverged", self.diverged);
+        if let Some(s) = self.diverged_at {
+            j.set("diverged_at", s);
+        }
+        if let Some(a) = self.test_acc {
+            j.set("test_acc", a);
+        }
+        j.set(
+            "loss",
+            Json::Arr(self.steps.iter().map(|r| Json::Num(r.loss)).collect()),
+        );
+        j.set(
+            "steps",
+            Json::Arr(
+                self.steps
+                    .iter()
+                    .map(|r| Json::Num(r.step as f64))
+                    .collect(),
+            ),
+        );
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, loss: f64) -> StepRecord {
+        StepRecord {
+            step,
+            loss,
+            train_acc: 0.5,
+        }
+    }
+
+    #[test]
+    fn detects_nan_divergence() {
+        let mut m = RunMetrics::default();
+        m.push(rec(0, 2.0));
+        m.push(rec(1, f64::NAN));
+        m.push(rec(2, 2.0));
+        assert!(m.diverged);
+        assert_eq!(m.diverged_at, Some(1));
+    }
+
+    #[test]
+    fn detects_explosion() {
+        let mut m = RunMetrics::default();
+        m.push(rec(0, 2.0));
+        m.push(rec(1, 1e6));
+        assert!(m.diverged);
+    }
+
+    #[test]
+    fn healthy_run_not_flagged() {
+        let mut m = RunMetrics::default();
+        for i in 0..100 {
+            m.push(rec(i, 2.0 / (i + 1) as f64));
+        }
+        assert!(!m.diverged);
+        assert!(m.tail_loss(10).unwrap() < 0.03);
+    }
+
+    #[test]
+    fn csv_and_json_roundtrip() {
+        let mut m = RunMetrics::default();
+        m.push(rec(0, 2.5));
+        m.push(rec(1, 1.5));
+        m.test_acc = Some(0.9);
+        let csv = m.to_csv();
+        assert!(csv.starts_with("step,loss"));
+        assert_eq!(csv.lines().count(), 3);
+        let j = m.to_json();
+        assert_eq!(j.get("test_acc").unwrap().as_f64(), Some(0.9));
+        assert_eq!(j.get("loss").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn tail_handles_short_runs() {
+        let mut m = RunMetrics::default();
+        m.push(rec(0, 4.0));
+        assert_eq!(m.tail_loss(10), Some(4.0));
+        assert_eq!(RunMetrics::default().tail_loss(5), None);
+    }
+}

@@ -1,0 +1,13 @@
+//! Training substrate: a bit-accurate reduced-precision native trainer
+//! (every GEMM routed through the softfloat simulator at its own
+//! precision), the loss/optimizer pieces, and metrics with divergence
+//! detection. The PJRT-artifact trainer lives in [`crate::runtime`]'s
+//! exec layer and shares [`metrics`].
+
+pub mod loss;
+pub mod metrics;
+pub mod native;
+pub mod sgd;
+
+pub use metrics::{RunMetrics, StepRecord};
+pub use native::{NativeTrainer, PrecisionPlan, TrainConfig};

@@ -1,0 +1,150 @@
+//! Tiny command-line argument parser (no `clap` in the offline build).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed getters and error messages listing valid keys.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positionals in order plus `--key` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment (skips argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|s| {
+                s.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u32(&self, name: &str, default: u32) -> u32 {
+        self.get_usize(name, default as usize) as u32
+    }
+
+    pub fn get_i64(&self, name: &str, default: i64) -> i64 {
+        self.get(name)
+            .map(|s| {
+                s.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|s| {
+                s.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of integers, e.g. `--maccs 8,10,12`.
+    pub fn get_u32_list(&self, name: &str, default: &[u32]) -> Vec<u32> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{name}: bad integer '{t}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["predict", "--net", "resnet18", "--chunk=64", "--verbose"]);
+        assert_eq!(a.positional, vec!["predict"]);
+        assert_eq!(a.get("net"), Some("resnet18"));
+        assert_eq!(a.get_usize("chunk", 1), 64);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--dry-run", "--force"]);
+        assert!(a.flag("dry-run") && a.flag("force"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_f64("sigma", 1.5), 1.5);
+        assert_eq!(a.get_or("out", "results.json"), "results.json");
+    }
+
+    #[test]
+    fn int_lists() {
+        let a = parse(&["--maccs", "8,10,12"]);
+        assert_eq!(a.get_u32_list("maccs", &[]), vec![8, 10, 12]);
+        assert_eq!(a.get_u32_list("other", &[5]), vec![5]);
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = parse(&["--pp", "-2"]);
+        assert_eq!(a.get_i64("pp", 0), -2);
+    }
+}

@@ -1,0 +1,122 @@
+//! Micro-benchmark harness (no `criterion` offline): warmup + timed
+//! iterations with median/mean/stddev reporting, black-box value sink and
+//! a tabular reporter shared by all `cargo bench` targets.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn report(&self) {
+        println!(
+            "{:<48} {:>12} {:>12} {:>12} {:>8}",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.stddev),
+            self.iters
+        );
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Print the report header once per bench binary.
+pub fn header() {
+    println!(
+        "{:<48} {:>12} {:>12} {:>12} {:>8}",
+        "benchmark", "median", "mean", "stddev", "iters"
+    );
+    println!("{}", "-".repeat(96));
+}
+
+/// Time `f`, auto-calibrating iteration count to fill ~`budget` after a
+/// warmup. Returns and prints the measurement.
+pub fn bench<F, R>(name: &str, budget: Duration, mut f: F) -> Measurement
+where
+    F: FnMut() -> R,
+{
+    // Warmup & calibration: find iters so one sample ≈ budget/20.
+    let t0 = Instant::now();
+    black_box(f());
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let samples: usize = 20;
+    let per_sample = budget / samples as u32;
+    let iters = (per_sample.as_nanos() / once.as_nanos()).clamp(1, 1_000_000) as u64;
+
+    let mut times: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters {
+            black_box(f());
+        }
+        times.push(t.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / times.len() as f64;
+    let m = Measurement {
+        name: name.to_string(),
+        iters,
+        mean: Duration::from_nanos(mean as u64),
+        median: Duration::from_nanos(median as u64),
+        stddev: Duration::from_nanos(var.sqrt() as u64),
+        min: Duration::from_nanos(times[0] as u64),
+    };
+    m.report();
+    m
+}
+
+/// Convenience: default 0.5 s budget.
+pub fn quick<F, R>(name: &str, f: F) -> Measurement
+where
+    F: FnMut() -> R,
+{
+    bench(name, Duration::from_millis(500), f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        // black_box the loop bound so release builds can't fold the sum
+        // to a constant (which would measure as 0 ns).
+        let m = bench("noop-ish", Duration::from_millis(20), || {
+            (0..black_box(1000u64)).map(black_box).sum::<u64>()
+        });
+        assert!(m.median > Duration::ZERO);
+        assert!(m.iters >= 1);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_dur(Duration::from_nanos(12)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(12)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(12)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

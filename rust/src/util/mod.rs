@@ -1,0 +1,15 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! a PCG64 RNG with Gaussian sampling, a high-accuracy `erfc`, descriptive
+//! statistics, a minimal JSON value + writer/parser (metrics interchange),
+//! a tiny argv parser for the CLI, and a micro-benchmark harness used by
+//! the `cargo bench` targets.
+
+pub mod argparse;
+pub mod bench;
+pub mod erf;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use erf::{erfc, q_function};
+pub use rng::Pcg64;

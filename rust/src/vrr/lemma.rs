@@ -1,0 +1,104 @@
+//! Lemma 1 — variance retention ratio under **full swamping only**
+//! (paper Eq. 1):
+//!
+//! ```text
+//!             Σ_{i=2}^{n-1} i·q_i  +  n·q̃_n
+//! VRR_full = ───────────────────────────────
+//!                        k·n
+//! q_i = 2Q(2^{m_acc}/√i)·(1 − 2Q(2^{m_acc}/√(i−1)))
+//! q̃_n = 1 − 2Q(2^{m_acc}/√n),   k = Σ q_i + q̃_n
+//! ```
+//!
+//! The implementation reuses each `2Q(2^{m}/√i)` between consecutive
+//! iterations (each appears as "crossing now" for `i` and "not before"
+//! for `i+1`), halving the erfc count on the `O(n)` loop.
+
+use super::qfunc::tail_prob;
+use super::sumq::sum_crossing_terms;
+
+/// `VRR_full_swamping(m_acc, n)` — Lemma 1, Eq. (1).
+///
+/// Returns 1.0 for `n ≤ 2` (nothing can swamp in a two-term sum under the
+/// lemma's surrogate event set — the i-sum is empty and q̃ dominates).
+/// The `O(n)` crossing sum runs through the dense+integrated evaluator
+/// in [`super::sumq`] (§Perf).
+pub fn vrr_full_swamping(m_acc: u32, n: usize) -> f64 {
+    if n <= 2 {
+        return 1.0;
+    }
+    let m = m_acc as f64;
+    let (mut num, mut k) = sum_crossing_terms(m, 0.0, 2, n);
+    let q_tilde = 1.0 - tail_prob(m, n as f64);
+    num += n as f64 * q_tilde;
+    k += q_tilde;
+    if k == 0.0 {
+        // Entire surrogate mass underflowed (astronomically long n with
+        // tiny m_acc): all variance is lost.
+        return 0.0;
+    }
+    num / (k * n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn high_precision_retains_everything() {
+        // Large m_acc ⇒ every q_i vanishes, q̃_n → 1 ⇒ VRR → 1.
+        for n in [10, 1_000, 100_000] {
+            let v = vrr_full_swamping(24, n);
+            assert!((v - 1.0).abs() < 1e-9, "n={n} v={v}");
+        }
+    }
+
+    #[test]
+    fn long_accumulation_loses_variance() {
+        // Small m_acc with n far past the knee ⇒ VRR well below 1.
+        let v = vrr_full_swamping(4, 100_000);
+        assert!(v < 0.5, "v={v}");
+    }
+
+    #[test]
+    fn monotone_in_m_acc() {
+        let n = 50_000;
+        let mut prev = vrr_full_swamping(2, n);
+        for m in 3..16 {
+            let v = vrr_full_swamping(m, n);
+            assert!(v >= prev - 1e-12, "m={m}: {v} < {prev}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn nonincreasing_in_n_past_knee() {
+        // Past the knee, more terms ⇒ lower retention.
+        let m = 6;
+        let knee = 1usize << (2 * m); // threshold crossing scale 2^{2m}
+        let mut prev = vrr_full_swamping(m, knee);
+        for mult in [2, 4, 8, 16] {
+            let v = vrr_full_swamping(m, knee * mult);
+            assert!(v <= prev + 1e-9);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn bounded_in_unit_interval() {
+        for m in [2, 5, 8, 12] {
+            for n in [3, 100, 10_000, 300_000] {
+                let v = vrr_full_swamping(m, n);
+                assert!((0.0..=1.0 + 1e-12).contains(&v), "m={m} n={n} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn short_sums_always_fine() {
+        assert_eq!(vrr_full_swamping(3, 1), 1.0);
+        assert_eq!(vrr_full_swamping(3, 2), 1.0);
+        // n = 10 with m_acc = 6: threshold 64σ vs typical |s| ≈ 3σ — no
+        // swamping mass, VRR ≈ 1.
+        assert!((vrr_full_swamping(6, 10) - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,28 @@
+//! The paper's theoretical contribution: the **variance retention ratio**
+//! (VRR) of reduced-precision floating-point accumulation.
+//!
+//! * [`lemma`] — Lemma 1: VRR under full swamping only (Eq. 1).
+//! * [`theorem`] — Theorem 1: VRR with partial swamping (Eq. 2), the main
+//!   formula `VRR(m_acc, m_p, n)`.
+//! * [`chunking`] — Corollary 1: two-level chunked accumulation (Eq. 3).
+//! * [`sparsity`] — effective-length corrections (Eqs. 4–5).
+//! * [`variance_lost`] — the usage rule `v(n) = e^{n(1-VRR)} < 50`
+//!   (Eq. 6), always evaluated in log space.
+//! * [`solver`] — inversion: the minimum `m_acc` for a given dot product,
+//!   which is what Table 1 is made of.
+
+pub mod chunking;
+pub mod lemma;
+pub mod qfunc;
+pub mod solver;
+pub mod sparsity;
+mod sumq;
+pub mod theorem;
+pub mod variance_lost;
+
+pub use chunking::vrr_chunked;
+pub use lemma::vrr_full_swamping;
+pub use solver::{min_m_acc, AccumSpec};
+pub use sparsity::{effective_length, vrr_sparse};
+pub use theorem::vrr;
+pub use variance_lost::{is_suitable, log_variance_lost, CUTOFF_LN};

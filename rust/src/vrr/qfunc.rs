@@ -1,0 +1,88 @@
+//! Probability building blocks of the VRR analysis.
+//!
+//! Every event probability in the paper is a two-sided Gaussian tail
+//! `2Q(2^{m}/√i)` — the probability that a zero-mean partial sum of `i`
+//! unit-variance terms exceeds the swamping threshold `2^{m}·σ_p` in
+//! magnitude (CLT: `s_i ~ N(0, i·σ_p²)`).
+
+use crate::util::erf::two_q;
+
+/// `2Q(2^{m} / √i)` — `P[|s_i| > 2^m σ_p]` under CLT.
+///
+/// `m` is a *real* threshold exponent (the partial-swamping stages use
+/// `m_acc - m_p + j`), `i` the accumulation index.
+#[inline]
+pub fn tail_prob(threshold_log2: f64, i: f64) -> f64 {
+    debug_assert!(i > 0.0);
+    two_q(threshold_log2.exp2() / i.sqrt())
+}
+
+/// `q_i = 2Q(2^{m_acc}/√i) · (1 − 2Q(2^{m_acc}/√(i−1)))` — the probability
+/// that full swamping first occurs at iteration `i` (paper Eq. 9):
+/// crossed the threshold at `i`, had not crossed at `i−1`.
+#[inline]
+pub fn first_crossing(m_acc: u32, i: usize) -> f64 {
+    let cross_now = tail_prob(m_acc as f64, i as f64);
+    let not_before = 1.0 - tail_prob(m_acc as f64, (i - 1) as f64);
+    cross_now * not_before
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tail_prob_monotone_in_i() {
+        // Longer accumulations are more likely to cross the threshold.
+        let mut prev = tail_prob(8.0, 1.0);
+        for i in 2..2000 {
+            let p = tail_prob(8.0, i as f64);
+            assert!(p >= prev, "i={i}");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn tail_prob_monotone_in_threshold() {
+        for i in [10.0, 1e4, 1e6] {
+            let mut prev = tail_prob(2.0, i);
+            for m in 3..20 {
+                let p = tail_prob(m as f64, i);
+                assert!(p <= prev);
+                prev = p;
+            }
+        }
+    }
+
+    #[test]
+    fn tail_prob_limits() {
+        // Tiny threshold vs huge n → prob ≈ 1; huge threshold → ≈ 0.
+        assert!(tail_prob(0.0, 1e12) > 0.999);
+        assert!(tail_prob(24.0, 10.0) < 1e-300);
+    }
+
+    #[test]
+    fn first_crossing_is_probability() {
+        for i in 2..500 {
+            let q = first_crossing(6, i);
+            assert!((0.0..=1.0).contains(&q), "q_{i} = {q}");
+        }
+    }
+
+    #[test]
+    fn first_crossing_mass_is_finite_positive() {
+        // The surrogate event set is NOT a partition — the paper divides
+        // by the normalization constant k for exactly this reason (k can
+        // exceed 1 by a lot once i ranges deep past the crossing region).
+        let m = 5;
+        let n = 20_000;
+        let mut mass = 0.0;
+        for i in 2..n {
+            mass += first_crossing(m, i);
+        }
+        assert!(mass.is_finite() && mass > 0.0, "mass={mass}");
+        // Far below the crossing region (i ≪ 2^{2m}) the mass is negligible.
+        let early: f64 = (2..20).map(|i| first_crossing(m, i)).sum();
+        assert!(early < 1e-9, "early={early}");
+    }
+}

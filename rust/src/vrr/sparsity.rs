@@ -1,0 +1,118 @@
+//! Sparsity corrections (paper §4.3, Eqs. 4–5): zero product terms are
+//! identity additions, so a dot product of nominal length `n` with
+//! non-zero ratio `NZR` behaves like an accumulation of length `NZR·n`.
+
+use super::chunking::interchunk_m_p;
+use super::theorem::vrr;
+
+/// Effective accumulation length `⌈NZR·n⌉` (at least 1).
+pub fn effective_length(n: usize, nzr: f64) -> usize {
+    assert!((0.0..=1.0).contains(&nzr), "NZR must be in [0,1], got {nzr}");
+    ((nzr * n as f64).ceil() as usize).max(1)
+}
+
+/// Eq. (4): `VRR_sparsity = VRR(m_acc, m_p, NZR·n)`.
+pub fn vrr_sparse(m_acc: u32, m_p: u32, n: usize, nzr: f64) -> f64 {
+    vrr(m_acc, m_p, effective_length(n, nzr))
+}
+
+/// Eq. (5): chunked accumulation with sparse inputs. Sparsity shortens the
+/// *intra*-chunk accumulation (`NZR·n₁`) and reduces the inter-chunk input
+/// precision growth accordingly. We additionally cap the effective
+/// inter-chunk length at the total number of non-zero terms — when inputs
+/// are so sparse that most chunks are empty, only `NZR·n₁·n₂` chunk
+/// results can be non-zero, and adding a zero chunk result is an identity
+/// operation by exactly the paper's §4.3 argument. (Without this cap,
+/// Eq. (5) taken literally can make chunking look *worse* than a plain
+/// sparse accumulation, which is unphysical.)
+pub fn vrr_chunked_sparse(
+    m_acc: u32,
+    m_p: u32,
+    n1: usize,
+    n2: usize,
+    nzr: f64,
+) -> f64 {
+    let n1_eff = effective_length(n1, nzr);
+    let n2_eff = n2.min(effective_length(n1 * n2, nzr));
+    vrr(m_acc, m_p, n1_eff) * vrr(m_acc, interchunk_m_p(m_acc, m_p, n1_eff), n2_eff)
+}
+
+/// Eq. (5) over a total length `n` with chunk size `chunk`.
+pub fn vrr_chunked_sparse_total(
+    m_acc: u32,
+    m_p: u32,
+    n: usize,
+    chunk: usize,
+    nzr: f64,
+) -> f64 {
+    assert!(chunk > 0);
+    if n <= chunk {
+        return vrr_sparse(m_acc, m_p, n, nzr);
+    }
+    vrr_chunked_sparse(m_acc, m_p, chunk, n.div_ceil(chunk), nzr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vrr::chunking::vrr_chunked_total;
+
+    const MP: u32 = 5;
+
+    #[test]
+    fn dense_is_identity() {
+        for n in [100, 10_000] {
+            assert_eq!(vrr_sparse(8, MP, n, 1.0), vrr(8, MP, n));
+        }
+    }
+
+    #[test]
+    fn sparsity_raises_vrr() {
+        // Shorter effective accumulations retain more variance.
+        let n = 1 << 18;
+        let dense = vrr_sparse(8, MP, n, 1.0);
+        let half = vrr_sparse(8, MP, n, 0.5);
+        let tenth = vrr_sparse(8, MP, n, 0.1);
+        assert!(half >= dense);
+        assert!(tenth >= half);
+        assert!(tenth > dense, "tenth {tenth} vs dense {dense}");
+    }
+
+    #[test]
+    fn effective_length_rounding() {
+        assert_eq!(effective_length(100, 0.5), 50);
+        assert_eq!(effective_length(101, 0.5), 51); // ceil
+        assert_eq!(effective_length(100, 0.0), 1); // floor at 1
+        assert_eq!(effective_length(7, 1.0), 7);
+    }
+
+    #[test]
+    #[should_panic]
+    fn nzr_out_of_range_panics() {
+        effective_length(10, 1.5);
+    }
+
+    #[test]
+    fn chunked_sparse_dense_matches_chunked() {
+        let n = 1 << 16;
+        assert_eq!(
+            vrr_chunked_sparse_total(8, MP, n, 64, 1.0),
+            vrr_chunked_total(8, MP, n, 64)
+        );
+    }
+
+    #[test]
+    fn chunked_sparse_raises_vrr() {
+        let n = 1 << 18;
+        let dense = vrr_chunked_sparse_total(6, MP, n, 64, 1.0);
+        let sparse = vrr_chunked_sparse_total(6, MP, n, 64, 0.25);
+        assert!(sparse >= dense, "sparse {sparse} vs dense {dense}");
+    }
+
+    #[test]
+    fn sparsity_shrinks_interchunk_growth() {
+        // NZR=0.25 on a 64-chunk → effective n1 = 16 → growth log2(16)=4
+        // instead of 6.
+        assert_eq!(interchunk_m_p(20, 5, effective_length(64, 0.25)), 9);
+    }
+}

@@ -1,0 +1,208 @@
+//! Theorem 1 — the paper's main formula (Eq. 2): variance retention ratio
+//! of a length-`n` accumulation with `m_p`-bit product mantissas and
+//! `m_acc`-bit partial-sum mantissas, accounting for **both** full and
+//! partial swamping.
+//!
+//! ```text
+//!        Σ_{i=2}^{n-1} (i−α)₊ q_i 1{i>α}
+//!      + Σ_{j_r=2}^{m_p} (n−α_{j_r})₊ q'_{j_r} 1{n>α_{j_r}}
+//!      + n·k₃
+//! VRR = ─────────────────────────────────────────────────────
+//!                          k·n
+//! ```
+//!
+//! with `α`/`α_{j_r}` the fractional-variance-loss horizons of the
+//! partial-swamping stages (paper Eqs. 13–16), `q'_{j_r}` the boundary
+//! events weighted by their expected duration `N_{j_r−1}`, and
+//! `k₃ = 1 − 2Q(2^{m_acc−m_p+1}/√n)` the no-swamping mass.
+
+use super::qfunc::tail_prob;
+
+/// Stage-loss partial sums `Σ_{j=1}^{J} 2^j (2^j − 1)(2^{j+1} − 1)`.
+fn stage_loss_sum(upto: u32) -> f64 {
+    let mut s = 0.0;
+    for j in 1..=upto as i32 {
+        s += 2f64.powi(j) * (2f64.powi(j) - 1.0) * (2f64.powi(j + 1) - 1.0);
+    }
+    s
+}
+
+/// `α_{j_r} = (2^{m_acc − 3 m_p} / 3) · Σ_{j=1}^{j_r−1} 2^j(2^j−1)(2^{j+1}−1)`.
+///
+/// `α` (the full-swamping horizon) is `α_{m_p+1}` in this notation, i.e.
+/// the sum runs over all `m_p` stages.
+pub fn alpha(m_acc: u32, m_p: u32, stages: u32) -> f64 {
+    2f64.powi(m_acc as i32 - 3 * m_p as i32) / 3.0 * stage_loss_sum(stages)
+}
+
+/// Theorem 1 (Eq. 2): `VRR(m_acc, m_p, n)`.
+///
+/// * `m_acc` — accumulator mantissa bits (partial sums),
+/// * `m_p` — product-term mantissa bits (5 for (1,5,2)×(1,5,2) products),
+/// * `n` — accumulation length.
+///
+/// Returns a value in `[0, 1]` (clamped against ~1e−15 numerical spill).
+pub fn vrr(m_acc: u32, m_p: u32, n: usize) -> f64 {
+    if n <= 2 {
+        return 1.0;
+    }
+    let nf = n as f64;
+    let m = m_acc as f64;
+
+    // --- full-swamping events, variance discounted by the α horizon ----
+    let a_full = alpha(m_acc, m_p, m_p); // α
+    // Indicator 1{i>α}: start the sum past α (q_i for i ≤ α contributes
+    // neither to the numerator nor to k1). The O(n) crossing sum runs
+    // through the dense+integrated evaluator in [`super::sumq`] (§Perf).
+    let start = if a_full >= (n - 1) as f64 {
+        n // sum skipped entirely
+    } else {
+        (a_full.floor() as usize + 1).max(2)
+    };
+    let (term1, k1) = super::sumq::sum_crossing_terms(m, a_full, start, n);
+
+    // --- partial-swamping boundary events (stages reached, no full) -----
+    let mut term2 = 0.0;
+    let mut k2 = 0.0;
+    for j_r in 2..=m_p {
+        let a_jr = alpha(m_acc, m_p, j_r - 1);
+        if nf <= a_jr {
+            continue; // indicator 1{n > α_{j_r}}
+        }
+        // N_{j_r−1} = 2^{m_acc − m_p + j_r}  (expected duration of stage j_r−1)
+        let n_prev = 2f64.powi(m_acc as i32 - m_p as i32 + j_r as i32);
+        let lo = tail_prob((m_acc + j_r - 1) as f64 - m_p as f64, nf);
+        let hi = tail_prob((m_acc + j_r) as f64 - m_p as f64, nf);
+        let q_jr = n_prev * lo * (1.0 - hi);
+        term2 += (nf - a_jr) * q_jr;
+        k2 += q_jr;
+    }
+
+    // --- no-swamping mass -----------------------------------------------
+    let k3 = 1.0 - tail_prob((m_acc + 1) as f64 - m_p as f64, nf);
+
+    let k = k1 + k2 + k3;
+    if k == 0.0 {
+        return 0.0;
+    }
+    ((term1 + term2 + nf * k3) / (k * nf)).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vrr::lemma::vrr_full_swamping;
+
+    const MP: u32 = 5; // products of two (1,5,2) values
+
+    #[test]
+    fn high_precision_limit() {
+        for n in [100, 10_000, 1_000_000] {
+            let v = vrr(24, MP, n);
+            assert!((v - 1.0).abs() < 1e-9, "n={n} v={v}");
+        }
+    }
+
+    #[test]
+    fn low_precision_long_accumulation_collapses() {
+        // The formula's n→∞ limit decays slowly (the surviving mass sits
+        // in the early full-swamping events); well past the knee, less
+        // than half the variance is retained and v(n) is astronomical.
+        let v = vrr(4, MP, 1_000_000);
+        assert!(v < 0.5, "v={v}");
+        assert!(
+            crate::vrr::variance_lost::log_variance_lost(v, 1_000_000)
+                > 100.0 * crate::vrr::variance_lost::CUTOFF_LN
+        );
+    }
+
+    #[test]
+    fn monotone_in_m_acc() {
+        // Strict monotonicity holds through the knee; at the saturated
+        // end (VRR within ~1e-5 of 1) the surrogate event model admits
+        // tiny wiggles, hence the 1e-5 tolerance.
+        for n in [1_000, 65_536, 500_000] {
+            let mut prev = vrr(3, MP, n);
+            for m in 4..20 {
+                let v = vrr(m, MP, n);
+                assert!(v >= prev - 1e-5, "m={m} n={n}: {v} < {prev}");
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn agrees_with_lemma_in_both_limits() {
+        // Theorem 1 and Lemma 1 model different event sets, so they are
+        // not ordered pointwise — but they must agree in the limits: both
+        // ≈1 far before the knee, both far below 1 far past it.
+        for m in [6u32, 8] {
+            let early = 1usize << (m.saturating_sub(3)); // tiny n
+            assert!(vrr(m, MP, early) > 0.999);
+            assert!(vrr_full_swamping(m, early) > 0.999);
+            let late = 1usize << (2 * m + 4);
+            assert!(vrr(m, MP, late) < 0.7, "thm m={m}: {}", vrr(m, MP, late));
+            assert!(
+                vrr_full_swamping(m, late) < 0.7,
+                "lemma m={m}: {}",
+                vrr_full_swamping(m, late)
+            );
+        }
+    }
+
+    #[test]
+    fn knee_exists_and_is_sharp() {
+        // For m_acc = 10 the knee sits around n ~ 2^{2(m_acc-m_p)}…2^{2m_acc};
+        // VRR must swing from ≈1 to markedly below 1 within a few octaves.
+        let m = 10;
+        let early = vrr(m, MP, 1 << 8);
+        let late = vrr(m, MP, 1 << 22);
+        assert!(early > 0.999, "early={early}");
+        assert!(late < 0.9, "late={late}");
+    }
+
+    #[test]
+    fn bounded_unit_interval() {
+        for m in [2, 4, 6, 8, 12, 16] {
+            for n in [3, 64, 4_096, 262_144] {
+                let v = vrr(m, MP, n);
+                assert!((0.0..=1.0).contains(&v), "m={m} n={n} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_monotone_in_stages() {
+        for s in 1..MP {
+            assert!(alpha(10, MP, s) < alpha(10, MP, s + 1));
+        }
+    }
+
+    #[test]
+    fn alpha_scales_with_m_acc() {
+        // One more accumulator bit doubles every α horizon.
+        let a = alpha(10, MP, MP);
+        let b = alpha(11, MP, MP);
+        assert!((b / a - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trivial_lengths() {
+        assert_eq!(vrr(8, MP, 1), 1.0);
+        assert_eq!(vrr(8, MP, 2), 1.0);
+    }
+
+    #[test]
+    fn more_product_bits_do_not_help_tiny_accumulators() {
+        // With m_acc fixed and small, increasing m_p (finer products)
+        // increases partial-swamping loss — VRR must not increase.
+        let n = 100_000;
+        let m_acc = 8;
+        let v_coarse = vrr(m_acc, 3, n);
+        let v_fine = vrr(m_acc, 8, n);
+        assert!(
+            v_fine <= v_coarse + 1e-6,
+            "fine {v_fine} vs coarse {v_coarse}"
+        );
+    }
+}

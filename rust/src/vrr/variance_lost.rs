@@ -1,0 +1,86 @@
+//! The usage rule (paper §4.4, Eq. 6): the **normalized exponential
+//! variance lost** `v(n) = e^{n(1 − VRR)}`, with the suitability cut-off
+//! `v(n) < 50`.
+//!
+//! `v(n)` overflows f64 spectacularly past the knee (`n(1−VRR)` reaches
+//! thousands), so the library works exclusively with
+//! `log v(n) = n·(1 − VRR)` and compares against `ln 50`.
+
+/// `ln 50` — the paper's cut-off in log space.
+pub const CUTOFF_LN: f64 = 3.912023005428146; // ln(50)
+
+/// `log v(n) = n · (1 − VRR)` for a VRR already computed by any of the
+/// formula variants (plain / chunked / sparse).
+#[inline]
+pub fn log_variance_lost(vrr_value: f64, n: usize) -> f64 {
+    n as f64 * (1.0 - vrr_value)
+}
+
+/// The paper's suitability predicate: `v(n) < 50`.
+#[inline]
+pub fn is_suitable(vrr_value: f64, n: usize) -> bool {
+    log_variance_lost(vrr_value, n) < CUTOFF_LN
+}
+
+/// `v(n)` itself, saturating at `f64::MAX` — only for display.
+pub fn variance_lost(vrr_value: f64, n: usize) -> f64 {
+    let lg = log_variance_lost(vrr_value, n);
+    if lg > 700.0 {
+        f64::INFINITY
+    } else {
+        lg.exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vrr::theorem::vrr;
+
+    #[test]
+    fn cutoff_constant() {
+        assert!((CUTOFF_LN - 50f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_retention_is_suitable() {
+        assert!(is_suitable(1.0, 1_000_000));
+        assert_eq!(log_variance_lost(1.0, 123), 0.0);
+    }
+
+    #[test]
+    fn total_loss_is_unsuitable() {
+        assert!(!is_suitable(0.0, 100));
+        assert_eq!(variance_lost(0.5, 10), (5.0f64).exp());
+    }
+
+    #[test]
+    fn saturates_instead_of_overflowing() {
+        assert_eq!(variance_lost(0.0, 10_000), f64::INFINITY);
+        assert!(log_variance_lost(0.0, 10_000).is_finite());
+    }
+
+    #[test]
+    fn knee_behaviour_with_real_vrr() {
+        // For m_acc = 10, m_p = 5: small n suitable, huge n unsuitable.
+        let small = 1usize << 8;
+        let big = 1usize << 20;
+        assert!(is_suitable(vrr(10, 5, small), small));
+        assert!(!is_suitable(vrr(10, 5, big), big));
+    }
+
+    #[test]
+    fn suitability_is_monotone_in_m_acc() {
+        // Once suitable at m_acc, every wider accumulator stays suitable.
+        let n = 1usize << 16;
+        let mut was_suitable = false;
+        for m in 2..24 {
+            let ok = is_suitable(vrr(m, 5, n), n);
+            if was_suitable {
+                assert!(ok, "suitability lost at m_acc={m}");
+            }
+            was_suitable = ok;
+        }
+        assert!(was_suitable, "never became suitable");
+    }
+}

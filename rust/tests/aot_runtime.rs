@@ -1,0 +1,137 @@
+//! Integration tests over the AOT artifacts + PJRT runtime: the Python
+//! compile path and the Rust run path meeting in the middle. All tests
+//! skip gracefully when `make artifacts` has not been run.
+
+use abws::data::synth::{generate, SynthSpec};
+use abws::runtime::{ArtifactStore, Runtime, TrainStepExecutor};
+use abws::softfloat::gemm::{rp_gemm_mxu, GemmConfig};
+use abws::softfloat::tensor::Tensor;
+use abws::util::rng::Pcg64;
+
+fn store() -> Option<ArtifactStore> {
+    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    match ArtifactStore::open(root) {
+        Ok(s) => {
+            if s.verify().is_ok() {
+                Some(s)
+            } else {
+                eprintln!("skipping: artifacts incomplete (run `make artifacts`)");
+                None
+            }
+        }
+        Err(_) => {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn kernel_artifact_matches_softfloat_simulator() {
+    let Some(store) = store() else { return };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let path = store.root.join("rp_gemm_macc8_chunk64.hlo.txt");
+    if !path.exists() {
+        eprintln!("skipping: kernel artifact missing");
+        return;
+    }
+    let exe = rt.compile_hlo_file(&path).expect("compile kernel artifact");
+
+    let mut rng = Pcg64::seeded(77);
+    let a = Tensor::randn(&[8, 256], 1.0, &mut rng);
+    let b = Tensor::randn(&[256, 8], 1.0, &mut rng);
+    let la = abws::runtime::client::tensor_to_literal(&a).unwrap();
+    let lb = abws::runtime::client::tensor_to_literal(&b).unwrap();
+    let out = rt.run(&exe, &[la, lb]).expect("execute kernel");
+    let got = abws::runtime::client::literal_to_tensor(&out[0]).unwrap();
+    assert_eq!(got.shape, vec![8, 8]);
+
+    // The Rust simulator's MXU-style GEMM implements the same chunked
+    // semantics; intra-chunk summation order may differ (XLA dot vs exact
+    // f64), so we require near-exact agreement: every element within one
+    // accumulator quantum, the bulk exactly equal.
+    let want = rp_gemm_mxu(&a, &b, &GemmConfig::paper(8, Some(64)), 64);
+    let mut exact = 0usize;
+    for (g, w) in got.data.iter().zip(&want.data) {
+        let tol = (w.abs().max(1.0) as f64) * 2f64.powi(-7); // one quantum at m_acc=8
+        assert!(
+            ((g - w).abs() as f64) <= tol,
+            "kernel {g} vs simulator {w}"
+        );
+        if g == w {
+            exact += 1;
+        }
+    }
+    assert!(
+        exact >= got.data.len() * 9 / 10,
+        "only {exact}/{} exactly equal",
+        got.data.len()
+    );
+}
+
+#[test]
+fn baseline_artifact_trains_to_convergence() {
+    let Some(store) = store() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut exec = TrainStepExecutor::new(&rt, &store, "baseline", 42).unwrap();
+    let d = exec.dims;
+    let (train, _) = generate(&SynthSpec {
+        dim: d.dim,
+        classes: d.classes,
+        ..Default::default()
+    });
+    let metrics = exec.train(&train, 50).unwrap();
+    assert!(!metrics.diverged);
+    let first = metrics.steps.first().unwrap().loss;
+    let last = metrics.tail_loss(10).unwrap();
+    assert!(last < 0.7 * first, "loss {first} -> {last}");
+}
+
+#[test]
+fn reduced_precision_artifact_runs() {
+    let Some(store) = store() else { return };
+    let rt = Runtime::cpu().unwrap();
+    for variant in ["macc8", "macc8_chunk64"] {
+        let mut exec = TrainStepExecutor::new(&rt, &store, variant, 42).unwrap();
+        let d = exec.dims;
+        let (train, _) = generate(&SynthSpec {
+            dim: d.dim,
+            classes: d.classes,
+            ..Default::default()
+        });
+        let metrics = exec.train(&train, 20).unwrap();
+        assert!(!metrics.diverged, "{variant} diverged");
+        assert!(metrics.steps.len() == 20);
+    }
+}
+
+#[test]
+fn unknown_variant_is_a_clean_error() {
+    let Some(store) = store() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let err = TrainStepExecutor::new(&rt, &store, "definitely_not_a_variant", 0);
+    let Err(e) = err else {
+        panic!("unknown variant should fail");
+    };
+    let msg = format!("{e:#}");
+    assert!(msg.contains("baseline"), "error should list variants: {msg}");
+}
+
+#[test]
+fn state_shapes_survive_round_trip() {
+    let Some(store) = store() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut exec = TrainStepExecutor::new(&rt, &store, "baseline", 7).unwrap();
+    let d = exec.dims;
+    let (train, _) = generate(&SynthSpec {
+        dim: d.dim,
+        classes: d.classes,
+        ..Default::default()
+    });
+    let (xb, yb) = train.batch(0, d.batch);
+    exec.step(&xb, &yb).unwrap();
+    let (w1, w2) = exec.params().unwrap();
+    assert_eq!(w1.shape, vec![d.dim, d.hidden]);
+    assert_eq!(w2.shape, vec![d.hidden, d.classes]);
+    assert!(w1.data.iter().all(|x| x.is_finite()));
+}
