@@ -10,34 +10,41 @@
 //! ```
 //!
 //! Layer syntax: `--conv CIN x COUT x K x HOUT`  (square kernels/maps),
-//!               `--fc CIN x COUT`.
+//!               `--fc CIN x COUT`; both options repeat and layers are
+//! taken in argv order. Pass `--json` for the machine-readable
+//! `AdvisorReport` instead of the table (the same document `abws serve`
+//! streams).
 
+use abws::api::{AdvisorRequest, PrecisionPolicy};
 use abws::nets::layer::{Layer, Network};
-use abws::nets::lengths::{accum_lengths, Gemm};
+use abws::nets::lengths::Gemm;
 use abws::nets::nzr::NzrModel;
-use abws::nets::predict::predict_network;
 use abws::util::argparse::Args;
+use anyhow::{ensure, Context, Result};
 
-fn parse_dims(spec: &str) -> Vec<usize> {
+fn parse_dims(spec: &str) -> Result<Vec<usize>> {
     spec.split('x')
-        .map(|t| t.trim().parse().expect("layer dims must be integers"))
+        .map(|t| {
+            t.trim()
+                .parse()
+                .with_context(|| format!("bad layer dims '{spec}': '{t}' is not an integer"))
+        })
         .collect()
 }
 
-fn main() {
-    let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(argv.iter().cloned());
+fn main() -> Result<()> {
+    let args = Args::from_env();
 
-    // Collect layers in argv order (Args keeps only the last value per
-    // key, so scan the raw argv for repeatable --conv/--fc options).
+    // Repeatable --conv/--fc options, interleaved in argv order (the
+    // network is the argv sequence; `Args::get_all` gives per-key lists,
+    // `Args::entries` the cross-key order we need here).
     let mut layers = Vec::new();
-    let mut i = 0;
-    while i < argv.len() {
-        match argv[i].as_str() {
-            "--conv" => {
-                let d = parse_dims(&argv[i + 1]);
-                assert_eq!(d.len(), 4, "--conv CINxCOUTxKxHOUT");
-                let idx = layers.len();
+    for (key, spec) in args.entries() {
+        let idx = layers.len();
+        match key {
+            "conv" => {
+                let d = parse_dims(spec)?;
+                ensure!(d.len() == 4, "--conv expects CINxCOUTxKxHOUT, got '{spec}'");
                 layers.push(Layer::conv(
                     &format!("conv{idx}"),
                     &format!("Layer {idx}"),
@@ -47,21 +54,18 @@ fn main() {
                     d[3],
                     d[3],
                 ));
-                i += 2;
             }
-            "--fc" => {
-                let d = parse_dims(&argv[i + 1]);
-                assert_eq!(d.len(), 2, "--fc CINxCOUT");
-                let idx = layers.len();
+            "fc" => {
+                let d = parse_dims(spec)?;
+                ensure!(d.len() == 2, "--fc expects CINxCOUT, got '{spec}'");
                 layers.push(Layer::fc(
                     &format!("fc{idx}"),
                     &format!("Layer {idx}"),
                     d[0],
                     d[1],
                 ));
-                i += 2;
             }
-            _ => i += 1,
+            _ => {}
         }
     }
     if layers.is_empty() {
@@ -80,28 +84,33 @@ fn main() {
         layers,
         first_layer: 0,
     };
-    let nzr = NzrModel::uniform(
-        args.get_f64("nzr-fwd", 1.0),
-        args.get_f64("nzr-bwd", 0.5),
-        args.get_f64("nzr-grad", 0.5),
-    );
-    let chunk = args.get_usize("chunk", 64);
-    let m_p = args.get_u32("mp", 5);
+    let policy = PrecisionPolicy::paper()
+        .with_m_p(args.get_u32("mp", 5))
+        .with_chunk(Some(args.get_usize("chunk", 64)))
+        .with_nzr(NzrModel::uniform(
+            args.get_f64("nzr-fwd", 1.0),
+            args.get_f64("nzr-bwd", 0.5),
+            args.get_f64("nzr-grad", 0.5),
+        ));
 
-    let pred = predict_network(&net, &nzr, m_p, chunk);
+    let report = AdvisorRequest::custom(net, policy).run()?;
+    if args.flag("json") {
+        println!("{}", report.to_json());
+        return Ok(());
+    }
+
     println!(
         "{:<10} {:<10} {:>10} {:>16} {:>16}",
         "layer", "gemm", "length", "m_acc (normal)", "m_acc (chunked)"
     );
-    for (layer, lp) in net.layers.iter().zip(&pred.layers) {
-        let lengths = accum_lengths(&net, layer);
+    for lp in &report.prediction.layers {
         for gemm in Gemm::ALL {
             if let Some(Some(p)) = lp.per_gemm.get(gemm.name()) {
                 println!(
                     "{:<10} {:<10} {:>10} {:>16} {:>16}",
                     lp.layer,
                     gemm.name(),
-                    lengths.get(gemm),
+                    lp.lengths.get(gemm),
                     p.normal,
                     p.chunked
                 );
@@ -112,4 +121,5 @@ fn main() {
         "\nAccumulator format: (1, 6, m_acc) floating-point; inputs (1,5,2); \
          cut-off v(n) < 50 (paper Eq. 6)."
     );
+    Ok(())
 }

@@ -1,29 +1,27 @@
-//! Quickstart: the library in five minutes.
+//! Quickstart: the library in five minutes, through `abws::api`.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 //!
 //! 1. Evaluate the variance retention ratio of an accumulation.
-//! 2. Ask the solver for the minimum accumulator mantissa width.
+//! 2. Ask the (memoized) solver for the minimum accumulator width.
 //! 3. Check the answer against the bit-accurate Monte-Carlo simulator.
-//! 4. Predict a whole network's Table-1 row.
+//! 4. Predict a whole network's Table-1 row with one `AdvisorRequest`.
 
+use abws::api::{cache, AdvisorRequest, PrecisionPolicy};
 use abws::mc::{empirical_vrr, McConfig};
-use abws::nets::nzr::NzrModel;
-use abws::nets::predict::predict_network;
-use abws::nets::resnet::resnet18_imagenet;
-use abws::vrr::solver::{min_m_acc, AccumSpec};
-use abws::vrr::theorem::vrr;
 use abws::vrr::variance_lost::{is_suitable, log_variance_lost};
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     // 1. A dot product of length 65,536 with (1,5,2) inputs (m_p = 5)
     //    accumulated at m_acc = 10 mantissa bits: how much variance
-    //    survives?
-    let (m_acc, m_p, n) = (10, 5, 65_536);
-    let v = vrr(m_acc, m_p, n);
-    println!("VRR(m_acc={m_acc}, m_p={m_p}, n={n}) = {v:.6}");
+    //    survives? One PrecisionPolicy describes the whole setup.
+    let policy = PrecisionPolicy::paper();
+    let (m_acc, n) = (10, 65_536);
+    let spec = policy.accum_spec(n, 1.0);
+    let v = cache::vrr(&spec, m_acc);
+    println!("VRR(m_acc={m_acc}, m_p={}, n={n}) = {v:.6}", policy.m_p);
     println!(
         "log v(n) = {:.2}  (suitable: {})",
         log_variance_lost(v, n),
@@ -31,10 +29,10 @@ fn main() {
     );
 
     // 2. So what is the minimum suitable width? And with chunk-64
-    //    accumulation?
-    let spec = AccumSpec::plain(n);
-    let plain = min_m_acc(&spec);
-    let chunked = min_m_acc(&spec.with_chunk(64));
+    //    accumulation? Both queries hit the process-wide solve cache, so
+    //    asking again later is free.
+    let plain = cache::min_m_acc(&spec);
+    let chunked = cache::min_m_acc(&spec.with_chunk(64));
     println!("minimum m_acc: {plain} (normal), {chunked} (chunk-64)");
 
     // 3. Trust but verify: measure the variance retention empirically
@@ -44,11 +42,13 @@ fn main() {
         println!(
             "measured VRR at m_acc={m}: {:.4} (theory {:.4})",
             r.vrr,
-            vrr(m, m_p, n)
+            cache::vrr(&spec, m)
         );
     }
 
-    // 4. The paper's Table 1 for ImageNet ResNet-18.
-    let pred = predict_network(&resnet18_imagenet(), &NzrModel::resnet_default(), 5, 64);
-    println!("\n{}", pred.render());
+    // 4. The paper's Table 1 for ImageNet ResNet-18, as one typed
+    //    request — the same path `abws predict` and `abws serve` use.
+    let report = AdvisorRequest::builtin("resnet18", policy).run()?;
+    println!("\n{}", report.render());
+    Ok(())
 }

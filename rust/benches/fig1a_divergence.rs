@@ -8,6 +8,7 @@
 //! baseline curve descends, the naive reduced-accumulation curve does
 //! not (or comes apart).
 
+use abws::api::{baseline_plan, PrecisionPolicy};
 use abws::coordinator::experiment::{ExperimentResult, ResultSink};
 use abws::data::synth::{generate, SynthSpec};
 use abws::trainer::native::{NativeTrainer, PrecisionPlan, TrainConfig};
@@ -37,8 +38,11 @@ fn main() {
     };
 
     let arms: Vec<(&str, PrecisionPlan)> = vec![
-        ("baseline (ideal accumulation)", PrecisionPlan::baseline()),
-        ("reduced accumulation m_acc=4", PrecisionPlan::uniform(4, None)),
+        ("baseline (ideal accumulation)", baseline_plan()),
+        (
+            "reduced accumulation m_acc=4",
+            PrecisionPolicy::paper().plan_uniform(4),
+        ),
     ];
 
     let mut result = ExperimentResult::new("fig1a");

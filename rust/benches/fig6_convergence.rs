@@ -3,6 +3,10 @@
 //! −2), for normal and chunk-64 accumulation; panel (d) is the final
 //! accuracy degradation versus PP.
 //!
+//! Every arm is one [`abws::api::TrainRequest`] — the same typed query
+//! `abws serve` answers — so the bench assembles no `PrecisionPlan` or
+//! `AccumSpec` by hand and all six arms share the memoized solver.
+//!
 //! Paper claims to reproduce in shape:
 //!  * PP = 0 converges within the baseline's noise band (±0.5% for the
 //!    paper's nets; wider here because the task is small);
@@ -10,66 +14,43 @@
 //!  * chunked runs are *more* sensitive per bit (their assignments are
 //!    already lower).
 
+use abws::api::train::PlanWidths;
+use abws::api::{PlanSpec, PrecisionPolicy, TrainRequest};
 use abws::coordinator::experiment::{ExperimentResult, ResultSink};
 use abws::coordinator::sweep::run_sweep;
-use abws::data::synth::{generate, SynthSpec};
-use abws::trainer::native::{NativeTrainer, PrecisionPlan, TrainConfig};
 use abws::util::json::Json;
-use abws::vrr::solver::{min_m_acc, perturbed, AccumSpec};
 
 fn main() {
-    let dim = 1024;
-    let classes = 16;
-    let spec = SynthSpec {
-        n_train: 768,
-        n_test: 512,
-        dim,
-        classes,
-        noise: 8.0, // noise projection ≈ 0.25·margin — baseline lands in the low-90s
-        seed: 13,
-    };
-    let (train, test) = generate(&spec);
-    let cfg = TrainConfig {
+    // The shared task: dim 1024 (FWD length), 16 classes (BWD length),
+    // batch 24 (GRAD length); noise projection ≈ 0.25·margin so the
+    // baseline lands in the low-90s.
+    let base = TrainRequest {
+        policy: PrecisionPolicy::paper(),
+        plan: PlanSpec::Baseline,
+        dim: 1024,
+        classes: 16,
         hidden: 48,
         steps: 150,
         batch: 24,
         seed: 3,
-        log_every: 1,
-        ..Default::default()
+        data_seed: 13,
+        n_train: 768,
+        n_test: 512,
+        noise: 8.0,
     };
+
+    // One deterministic dataset, shared by the baseline and all six
+    // sweep arms (they differ only in policy/plan).
+    let (train, test) = abws::data::synth::generate(&base.dataset_spec());
 
     // Baseline arm.
-    let mut tb = NativeTrainer::new(dim, classes, PrecisionPlan::baseline(), cfg);
-    let mb = tb.train(&train);
-    let base_acc = tb.evaluate(&test);
-    println!(
-        "baseline: final loss {:.4}, test acc {:.3}",
-        mb.tail_loss(15).unwrap(),
-        base_acc
-    );
-
-    // Predicted per-GEMM precisions for this model's accumulations.
-    let predict = |chunk: Option<usize>| -> (u32, u32, u32) {
-        let f = min_m_acc(&AccumSpec {
-            n: dim,
-            m_p: 5,
-            nzr: 1.0,
-            chunk,
-        });
-        let b = min_m_acc(&AccumSpec {
-            n: classes,
-            m_p: 5,
-            nzr: 0.5,
-            chunk,
-        });
-        let g = min_m_acc(&AccumSpec {
-            n: cfg.batch,
-            m_p: 5,
-            nzr: 0.5,
-            chunk,
-        });
-        (f, b, g)
-    };
+    let baseline = base
+        .resolve()
+        .expect("baseline resolves")
+        .run_on(&train, &test);
+    let base_acc = baseline.test_acc;
+    let base_loss = baseline.metrics.tail_loss(15).unwrap();
+    println!("baseline: final loss {base_loss:.4}, test acc {base_acc:.3}");
 
     let mut grid = Vec::new();
     for chunked in [false, true] {
@@ -78,20 +59,17 @@ fn main() {
         }
     }
 
-    let rows = run_sweep(grid, 6, |&(chunked, pp)| {
-        let chunk = if chunked { Some(64) } else { None };
-        let (f, b, g) = predict(chunk);
-        let plan = PrecisionPlan::per_gemm(
-            perturbed(f, pp),
-            perturbed(b, pp),
-            perturbed(g, pp),
-            chunk,
-        );
-        let mut t = NativeTrainer::new(dim, classes, plan, cfg);
-        let m = t.train(&train);
-        let acc = t.evaluate(&test);
-        (chunked, pp, f, b, g, m, acc)
-    });
+    let rows: Vec<(bool, i32, PlanWidths, abws::api::TrainReport)> =
+        run_sweep(grid, 6, |&(chunked, pp)| {
+            let req = TrainRequest {
+                policy: PrecisionPolicy::paper().with_chunk(chunked.then_some(64)),
+                plan: PlanSpec::Predicted { pp },
+                ..base.clone()
+            };
+            let resolved = req.resolve().expect("predicted plan resolves");
+            let widths = resolved.widths.expect("predicted plan has widths");
+            (chunked, pp, widths, resolved.run_on(&train, &test))
+        });
 
     let mut result = ExperimentResult::new("fig6");
     println!(
@@ -99,34 +77,35 @@ fn main() {
         "mode", "PP", "m_acc(f/b/g)", "final loss", "test acc", "degrade", "diverged"
     );
     let mut degradations = std::collections::BTreeMap::new();
-    for (chunked, pp, f, b, g, m, acc) in &rows {
+    for (chunked, pp, w, rep) in &rows {
         let label = if *chunked { "chunk-64" } else { "normal" };
-        let degrade = base_acc - acc;
+        let degrade = base_acc - rep.test_acc;
         println!(
             "{label:>8} {pp:>4} {:>12} {:>11.4} {:>9.3} {:>10.3} {:>9}",
-            format!(
-                "{}/{}/{}",
-                perturbed(*f, *pp),
-                perturbed(*b, *pp),
-                perturbed(*g, *pp)
-            ),
-            m.tail_loss(15).unwrap_or(f64::NAN),
-            acc,
+            format!("{}/{}/{}", w.fwd, w.bwd, w.grad),
+            rep.metrics.tail_loss(15).unwrap_or(f64::NAN),
+            rep.test_acc,
             degrade,
-            m.diverged
+            rep.metrics.diverged
         );
         degradations.insert((*chunked, *pp), degrade);
         result.push_row(&[
             ("mode", Json::from(label)),
             ("pp", Json::from(*pp as i64)),
-            ("m_fwd", Json::from(perturbed(*f, *pp))),
-            ("m_bwd", Json::from(perturbed(*b, *pp))),
-            ("m_grad", Json::from(perturbed(*g, *pp))),
-            ("final_loss", Json::from(m.tail_loss(15).unwrap_or(f64::NAN))),
-            ("test_acc", Json::from(*acc)),
+            ("m_fwd", Json::from(w.fwd)),
+            ("m_bwd", Json::from(w.bwd)),
+            ("m_grad", Json::from(w.grad)),
+            (
+                "final_loss",
+                Json::from(rep.metrics.tail_loss(15).unwrap_or(f64::NAN)),
+            ),
+            ("test_acc", Json::from(rep.test_acc)),
             ("degradation", Json::from(degrade)),
-            ("diverged", Json::from(m.diverged)),
-            ("loss_curve", m.to_json().get("loss").unwrap().clone()),
+            ("diverged", Json::from(rep.metrics.diverged)),
+            (
+                "loss_curve",
+                rep.metrics.to_json().get("loss").unwrap().clone(),
+            ),
         ]);
     }
 
@@ -134,22 +113,19 @@ fn main() {
     // both in accuracy and in converged loss (the loss is the sensitive
     // instrument at this scale).
     println!("\nFig 6(d): degradation vs PP");
-    let base_loss = mb.tail_loss(15).unwrap();
     let mut shape_ok = true;
     for chunked in [false, true] {
         let d0 = degradations[&(chunked, 0)];
         let d2 = degradations[&(chunked, -2)];
         let label = if chunked { "chunk-64" } else { "normal" };
-        let loss0 = rows
-            .iter()
-            .find(|r| r.0 == chunked && r.1 == 0)
-            .map(|r| r.5.tail_loss(15).unwrap_or(f64::NAN))
-            .unwrap();
-        let loss2 = rows
-            .iter()
-            .find(|r| r.0 == chunked && r.1 == -2)
-            .map(|r| r.5.tail_loss(15).unwrap_or(f64::INFINITY))
-            .unwrap();
+        let tail = |pp: i32, missing: f64| -> f64 {
+            rows.iter()
+                .find(|r| r.0 == chunked && r.1 == pp)
+                .map(|r| r.3.metrics.tail_loss(15).unwrap_or(missing))
+                .unwrap()
+        };
+        let loss0 = tail(0, f64::NAN);
+        let loss2 = tail(-2, f64::INFINITY);
         println!(
             "  {label}: acc-degrade PP=0 → {d0:.3}, PP=-2 → {d2:.3}; \
              loss PP=0 → {loss0:.4}, PP=-2 → {loss2:.4} (baseline {base_loss:.4})"

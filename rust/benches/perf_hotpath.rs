@@ -1,6 +1,7 @@
 //! Hot-path micro-benchmarks for the §Perf optimization loop:
 //! * `vrr` formula evaluation (the solver's inner call — O(n) erfc loop);
 //! * the solver (binary search over `vrr`);
+//! * the api solve cache: a repeated Table-1 sweep, uncached vs memoized;
 //! * softfloat quantize + sequential/chunked accumulation;
 //! * reduced-precision GEMM (the native trainer's inner loop);
 //! * a full Monte-Carlo VRR point.
@@ -10,7 +11,12 @@
 
 use std::time::Duration;
 
+use abws::api::cache::SolveCache;
 use abws::mc::{empirical_vrr, McConfig};
+use abws::nets::alexnet::alexnet_imagenet;
+use abws::nets::nzr::NzrModel;
+use abws::nets::predict::{predict_network, predict_network_with};
+use abws::nets::resnet::{resnet18_imagenet, resnet32_cifar10};
 use abws::softfloat::accumulate::{chunked_sum, sequential_sum};
 use abws::softfloat::format::FpFormat;
 use abws::softfloat::gemm::{rp_gemm, rp_gemm_mxu, GemmConfig};
@@ -38,6 +44,38 @@ fn main() {
     bench("min_m_acc(n=2^20, chunk64)", budget, || {
         std::hint::black_box(min_m_acc(&AccumSpec::plain(1 << 20).with_chunk(64)))
     });
+
+    // --- memoized solving: the repeated-query sweep ------------------------
+    // A Table-1 sweep over all three networks asks `min_m_acc` for every
+    // (layer, GEMM, {normal, chunked}) — the workload `abws serve` repeats
+    // per request. Uncached, each query re-runs the O(n) crossing sums;
+    // through the api SolveCache every repeat is a hash lookup.
+    let nets = [
+        (resnet32_cifar10(), NzrModel::resnet_default()),
+        (resnet18_imagenet(), NzrModel::resnet_default()),
+        (alexnet_imagenet(), NzrModel::alexnet_default()),
+    ];
+    let uncached = bench("table1 sweep x3 nets (uncached)", budget, || {
+        for (net, nzr) in &nets {
+            std::hint::black_box(predict_network(net, nzr, 5, 64));
+        }
+    });
+    let cache = SolveCache::new();
+    let memoized = bench("table1 sweep x3 nets (memoized)", budget, || {
+        for (net, nzr) in &nets {
+            std::hint::black_box(predict_network_with(net, nzr, 5, 64, |s| {
+                cache.min_m_acc(s)
+            }));
+        }
+    });
+    let stats = cache.stats();
+    println!(
+        "  -> memoization speedup on the repeated sweep: {:.0}x \
+         ({} cached solves, {} hits)",
+        uncached.median.as_secs_f64() / memoized.median.as_secs_f64().max(1e-12),
+        stats.solve_entries,
+        stats.hits,
+    );
 
     // --- softfloat primitives ------------------------------------------------
     let mut rng = Pcg64::seeded(1);

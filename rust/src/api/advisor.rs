@@ -1,0 +1,542 @@
+//! The advisory workflow the paper's conclusion describes — "determining
+//! the accumulation bit-width requirements … without computationally
+//! prohibitive brute-force emulations" — as one typed request/response
+//! pair: [`AdvisorRequest`] (a network plus a [`PrecisionPolicy`]) in,
+//! [`AdvisorReport`] (per-layer and per-group minimum accumulator
+//! mantissa widths, normal and chunked) out. Both sides round-trip
+//! through [`crate::util::json`] for the [`crate::api::serve`] batch
+//! front-end, and all solving goes through the memoized
+//! [`crate::api::cache`].
+
+use anyhow::{bail, Context, Result};
+
+use super::cache;
+use super::policy::{PrecisionPolicy, DEFAULT_ADVISOR_CHUNK, DEFAULT_RELU_NZR};
+use crate::nets::alexnet::alexnet_imagenet;
+use crate::nets::layer::{Layer, LayerKind, Network};
+use crate::nets::lengths::{AccumLengths, Gemm};
+use crate::nets::nzr::NzrModel;
+use crate::nets::predict::{predict_network_with, LayerPrediction, NetworkPrediction, Prediction};
+use crate::nets::resnet::{resnet18_imagenet, resnet32_cifar10};
+use crate::util::json::Json;
+
+/// The network a request analyzes: one of the paper's calibrated
+/// benchmarks by name, or a custom topology shipped in the request.
+#[derive(Clone, Debug)]
+pub enum NetworkSpec {
+    /// `"resnet32"`, `"resnet18"` or `"alexnet"` — resolved with its
+    /// calibrated NZR model.
+    Builtin(String),
+    /// A caller-described topology; sparsity defaults to the ReLU model
+    /// `(1.0, 0.5, 0.5)` unless the policy pins one.
+    Custom(Network),
+}
+
+/// The builtin benchmark keys, in paper order — the single source of
+/// truth consulted by both [`NetworkSpec::resolve`] and
+/// [`builtin_keys`]; extend [`builtin_network`] alongside it.
+pub const BUILTIN_NETWORKS: &[&str] = &["resnet32", "resnet18", "alexnet"];
+
+/// Construct a builtin benchmark with its calibrated sparsity model.
+fn builtin_network(name: &str) -> Option<(Network, NzrModel)> {
+    Some(match name {
+        "resnet32" => (resnet32_cifar10(), NzrModel::resnet_default()),
+        "resnet18" => (resnet18_imagenet(), NzrModel::resnet_default()),
+        "alexnet" => (alexnet_imagenet(), NzrModel::alexnet_default()),
+        _ => return None,
+    })
+}
+
+impl NetworkSpec {
+    /// Resolve to a concrete topology plus its default sparsity model.
+    pub fn resolve(&self) -> Result<(Network, NzrModel)> {
+        match self {
+            NetworkSpec::Builtin(name) => builtin_network(name).with_context(|| {
+                format!(
+                    "unknown network '{name}' ({})",
+                    BUILTIN_NETWORKS.join("|")
+                )
+            }),
+            NetworkSpec::Custom(net) => {
+                if net.layers.is_empty() {
+                    bail!("custom network has no layers");
+                }
+                let relu = NzrModel::uniform(
+                    DEFAULT_RELU_NZR.fwd,
+                    DEFAULT_RELU_NZR.bwd,
+                    DEFAULT_RELU_NZR.grad,
+                );
+                Ok((net.clone(), relu))
+            }
+        }
+    }
+}
+
+/// Expand a CLI-style network selector (`all` included) into builtin keys.
+pub fn builtin_keys(name: &str) -> Result<Vec<&'static str>> {
+    if name == "all" {
+        return Ok(BUILTIN_NETWORKS.to_vec());
+    }
+    match BUILTIN_NETWORKS.iter().find(|k| **k == name) {
+        Some(k) => Ok(vec![*k]),
+        None => bail!(
+            "unknown network '{name}' ({}|all)",
+            BUILTIN_NETWORKS.join("|")
+        ),
+    }
+}
+
+/// One precision-advisory query.
+#[derive(Clone, Debug)]
+pub struct AdvisorRequest {
+    pub network: NetworkSpec,
+    pub policy: PrecisionPolicy,
+    /// Which GEMMs to report on (empty is normalized to all three).
+    pub gemms: Vec<Gemm>,
+}
+
+impl AdvisorRequest {
+    pub fn builtin(name: &str, policy: PrecisionPolicy) -> AdvisorRequest {
+        AdvisorRequest {
+            network: NetworkSpec::Builtin(name.to_string()),
+            policy,
+            gemms: Gemm::ALL.to_vec(),
+        }
+    }
+
+    pub fn custom(net: Network, policy: PrecisionPolicy) -> AdvisorRequest {
+        AdvisorRequest {
+            network: NetworkSpec::Custom(net),
+            policy,
+            gemms: Gemm::ALL.to_vec(),
+        }
+    }
+
+    /// Run the analysis through the process-wide solve cache.
+    pub fn run(&self) -> Result<AdvisorReport> {
+        self.policy.validate()?;
+        let (net, default_nzr) = self.network.resolve()?;
+        let nzr = self.policy.nzr.clone().unwrap_or(default_nzr);
+        let chunk = self.policy.chunk.unwrap_or(DEFAULT_ADVISOR_CHUNK);
+        let gemms = if self.gemms.is_empty() {
+            Gemm::ALL.to_vec()
+        } else {
+            self.gemms.clone()
+        };
+        let mut prediction =
+            predict_network_with(&net, &nzr, self.policy.m_p, chunk, cache::min_m_acc);
+        // Narrow the report to the requested GEMMs.
+        if gemms.len() < Gemm::ALL.len() {
+            let keep: Vec<&'static str> = gemms.iter().map(Gemm::name).collect();
+            for lp in &mut prediction.layers {
+                lp.per_gemm.retain(|k, _| keep.contains(k));
+            }
+            for (_, agg) in &mut prediction.groups {
+                agg.retain(|k, _| keep.contains(k));
+            }
+        }
+        Ok(AdvisorReport { gemms, prediction })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("type", "advisor");
+        j.set(
+            "network",
+            match &self.network {
+                NetworkSpec::Builtin(name) => Json::from(name.as_str()),
+                NetworkSpec::Custom(net) => network_to_json(net),
+            },
+        );
+        j.set("policy", self.policy.to_json());
+        j.set("gemms", gemms_to_json(&self.gemms));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<AdvisorRequest> {
+        let network = match j.get("network") {
+            Some(Json::Str(s)) => NetworkSpec::Builtin(s.clone()),
+            Some(obj @ Json::Obj(_)) => NetworkSpec::Custom(network_from_json(obj)?),
+            _ => bail!("request needs a 'network': a builtin name or a topology object"),
+        };
+        let policy = match j.get("policy") {
+            Some(p) => PrecisionPolicy::from_json(p).context("parsing 'policy'")?,
+            None => PrecisionPolicy::paper(),
+        };
+        let gemms = match j.get("gemms") {
+            Some(g) => gemms_from_json(g)?,
+            None => Gemm::ALL.to_vec(),
+        };
+        Ok(AdvisorRequest {
+            network,
+            policy,
+            gemms,
+        })
+    }
+}
+
+/// Run one advisory per builtin network named by a CLI-style selector
+/// (`"all"` expands to the paper's three benchmarks).
+pub fn advise_builtin(name: &str, policy: &PrecisionPolicy) -> Result<Vec<AdvisorReport>> {
+    let mut out = Vec::new();
+    for key in builtin_keys(name)? {
+        out.push(AdvisorRequest::builtin(key, policy.clone()).run()?);
+    }
+    Ok(out)
+}
+
+/// The advisory answer: per-layer and per-group `(normal, chunked)`
+/// minimum accumulator mantissa widths. The underlying
+/// [`NetworkPrediction`] already reflects the request's GEMM narrowing
+/// (filtered GEMMs are absent from its maps, not `N/A`).
+#[derive(Clone, Debug)]
+pub struct AdvisorReport {
+    pub gemms: Vec<Gemm>,
+    pub prediction: NetworkPrediction,
+}
+
+impl AdvisorReport {
+    /// The analyzed network's display name.
+    pub fn network(&self) -> &str {
+        &self.prediction.network
+    }
+
+    /// Chunk size of the chunked column.
+    pub fn chunk(&self) -> usize {
+        self.prediction.chunk
+    }
+
+    /// Render the Table-1 style text table (identical to the pre-`api`
+    /// CLI output when all three GEMMs are requested).
+    pub fn render(&self) -> String {
+        self.prediction.render()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("type", "advisor_report");
+        j.set("network", self.network());
+        j.set("chunk", self.chunk());
+        j.set("gemms", gemms_to_json(&self.gemms));
+        let layers: Vec<Json> = self
+            .prediction
+            .layers
+            .iter()
+            .map(|lp| {
+                let mut l = Json::obj();
+                l.set("layer", lp.layer.as_str());
+                l.set("group", lp.group.as_str());
+                let mut lens = Json::obj();
+                lens.set("fwd", lp.lengths.fwd);
+                lens.set("bwd", lp.lengths.bwd);
+                lens.set("grad", lp.lengths.grad);
+                l.set("lengths", lens);
+                l.set("gemms", per_gemm_to_json(&lp.per_gemm));
+                l
+            })
+            .collect();
+        j.set("layers", Json::Arr(layers));
+        let groups: Vec<Json> = self
+            .prediction
+            .groups
+            .iter()
+            .map(|(g, agg)| {
+                let mut o = Json::obj();
+                o.set("group", g.as_str());
+                o.set("gemms", per_gemm_to_json(agg));
+                o
+            })
+            .collect();
+        j.set("groups", Json::Arr(groups));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<AdvisorReport> {
+        let network = j
+            .get("network")
+            .and_then(Json::as_str)
+            .context("report missing 'network'")?
+            .to_string();
+        let chunk = j
+            .get("chunk")
+            .and_then(Json::as_f64)
+            .context("report missing 'chunk'")? as usize;
+        let gemms = match j.get("gemms") {
+            Some(g) => gemms_from_json(g)?,
+            None => Gemm::ALL.to_vec(),
+        };
+        let mut layers = Vec::new();
+        for l in j
+            .get("layers")
+            .and_then(Json::as_arr)
+            .context("report missing 'layers'")?
+        {
+            let lens = l.get("lengths").context("layer missing 'lengths'")?;
+            let len_of = |k: &str| -> Result<usize> {
+                Ok(lens
+                    .get(k)
+                    .and_then(Json::as_f64)
+                    .with_context(|| format!("layer lengths missing '{k}'"))?
+                    as usize)
+            };
+            layers.push(LayerPrediction {
+                layer: l
+                    .get("layer")
+                    .and_then(Json::as_str)
+                    .context("layer missing 'layer'")?
+                    .to_string(),
+                group: l
+                    .get("group")
+                    .and_then(Json::as_str)
+                    .context("layer missing 'group'")?
+                    .to_string(),
+                per_gemm: per_gemm_from_json(l.get("gemms").context("layer missing 'gemms'")?)?,
+                lengths: AccumLengths {
+                    fwd: len_of("fwd")?,
+                    bwd: len_of("bwd")?,
+                    grad: len_of("grad")?,
+                },
+            });
+        }
+        let mut groups = Vec::new();
+        for g in j
+            .get("groups")
+            .and_then(Json::as_arr)
+            .context("report missing 'groups'")?
+        {
+            groups.push((
+                g.get("group")
+                    .and_then(Json::as_str)
+                    .context("group missing 'group'")?
+                    .to_string(),
+                per_gemm_from_json(g.get("gemms").context("group missing 'gemms'")?)?,
+            ));
+        }
+        Ok(AdvisorReport {
+            gemms,
+            prediction: NetworkPrediction {
+                network,
+                chunk,
+                layers,
+                groups,
+            },
+        })
+    }
+}
+
+fn gemms_to_json(gemms: &[Gemm]) -> Json {
+    Json::Arr(gemms.iter().map(|g| Json::from(g.name())).collect())
+}
+
+fn gemms_from_json(j: &Json) -> Result<Vec<Gemm>> {
+    let arr = match j.as_arr() {
+        Some(a) => a,
+        None => bail!("'gemms' must be an array of \"FWD\"/\"BWD\"/\"GRAD\""),
+    };
+    let mut out = Vec::new();
+    for g in arr {
+        let name = g.as_str().context("'gemms' entries must be strings")?;
+        out.push(
+            Gemm::from_name(name)
+                .with_context(|| format!("unknown GEMM '{name}' (FWD|BWD|GRAD)"))?,
+        );
+    }
+    Ok(out)
+}
+
+type PerGemm = std::collections::BTreeMap<&'static str, Option<Prediction>>;
+
+fn per_gemm_to_json(map: &PerGemm) -> Json {
+    let mut j = Json::obj();
+    for (name, pred) in map {
+        j.set(
+            name,
+            match pred {
+                None => Json::Null,
+                Some(p) => {
+                    let mut o = Json::obj();
+                    o.set("normal", p.normal);
+                    o.set("chunked", p.chunked);
+                    o
+                }
+            },
+        );
+    }
+    j
+}
+
+fn per_gemm_from_json(j: &Json) -> Result<PerGemm> {
+    let obj = match j {
+        Json::Obj(m) => m,
+        _ => bail!("'gemms' predictions must be an object"),
+    };
+    let mut out = PerGemm::new();
+    for (name, pred) in obj {
+        let gemm = Gemm::from_name(name)
+            .with_context(|| format!("unknown GEMM key '{name}' (FWD|BWD|GRAD)"))?;
+        let value = match pred {
+            Json::Null => None,
+            p => Some(Prediction {
+                normal: p
+                    .get("normal")
+                    .and_then(Json::as_f64)
+                    .context("prediction missing 'normal'")? as u32,
+                chunked: p
+                    .get("chunked")
+                    .and_then(Json::as_f64)
+                    .context("prediction missing 'chunked'")? as u32,
+            }),
+        };
+        out.insert(gemm.name(), value);
+    }
+    Ok(out)
+}
+
+fn network_to_json(net: &Network) -> Json {
+    let mut j = Json::obj();
+    j.set("name", net.name.as_str());
+    j.set("batch", net.batch);
+    j.set("first_layer", net.first_layer);
+    let layers: Vec<Json> = net
+        .layers
+        .iter()
+        .map(|l| {
+            let mut o = Json::obj();
+            o.set(
+                "kind",
+                match l.kind {
+                    LayerKind::Conv => "conv",
+                    LayerKind::Fc => "fc",
+                },
+            );
+            o.set("name", l.name.as_str());
+            o.set("group", l.group.as_str());
+            o.set("c_in", l.c_in);
+            o.set("c_out", l.c_out);
+            o.set("kernel", l.kernel);
+            o.set("h_out", l.h_out);
+            o.set("w_out", l.w_out);
+            o
+        })
+        .collect();
+    j.set("layers", Json::Arr(layers));
+    j
+}
+
+fn network_from_json(j: &Json) -> Result<Network> {
+    let layers_json = j
+        .get("layers")
+        .and_then(Json::as_arr)
+        .context("custom network needs a 'layers' array")?;
+    let mut layers = Vec::new();
+    for (idx, l) in layers_json.iter().enumerate() {
+        layers.push(layer_from_json(l, idx)?);
+    }
+    Ok(Network {
+        name: j
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("custom")
+            .to_string(),
+        batch: super::opt_num(j, "batch")?.unwrap_or(256.0) as usize,
+        first_layer: super::opt_num(j, "first_layer")?.unwrap_or(0.0) as usize,
+        layers,
+    })
+}
+
+fn layer_from_json(j: &Json, idx: usize) -> Result<Layer> {
+    let dim = |k: &str| -> Result<usize> {
+        Ok(super::opt_num(j, k)
+            .with_context(|| format!("layer {idx}"))?
+            .with_context(|| format!("layer {idx} missing '{k}'"))? as usize)
+    };
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("layer{idx}"));
+    let group = j
+        .get("group")
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("Layer {idx}"));
+    match j.get("kind").and_then(Json::as_str) {
+        Some("conv") => {
+            let h_out = dim("h_out")?;
+            let w_out = super::opt_num(j, "w_out")?.map(|v| v as usize);
+            Ok(Layer::conv(
+                &name,
+                &group,
+                dim("c_in")?,
+                dim("c_out")?,
+                dim("kernel")?,
+                h_out,
+                w_out.unwrap_or(h_out),
+            ))
+        }
+        Some("fc") => Ok(Layer::fc(&name, &group, dim("c_in")?, dim("c_out")?)),
+        Some(other) => bail!("layer {idx}: unknown kind '{other}' (conv|fc)"),
+        None => bail!("layer {idx}: missing 'kind' (conv|fc)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_report_matches_uncached_prediction() {
+        let report = AdvisorRequest::builtin("resnet32", PrecisionPolicy::paper())
+            .run()
+            .unwrap();
+        let direct = crate::nets::predict::predict_network(
+            &resnet32_cifar10(),
+            &NzrModel::resnet_default(),
+            5,
+            64,
+        );
+        assert_eq!(report.render(), direct.render());
+        assert_eq!(report.chunk(), 64);
+    }
+
+    #[test]
+    fn gemm_filter_narrows_report() {
+        let mut req = AdvisorRequest::builtin("resnet32", PrecisionPolicy::paper());
+        req.gemms = vec![Gemm::Grad];
+        let report = req.run().unwrap();
+        assert!(report.render().contains("GRAD"));
+        assert!(!report.render().contains("FWD"));
+        for lp in &report.prediction.layers {
+            assert_eq!(lp.per_gemm.len(), 1);
+        }
+    }
+
+    #[test]
+    fn unknown_builtin_is_an_error() {
+        assert!(AdvisorRequest::builtin("vgg", PrecisionPolicy::paper())
+            .run()
+            .is_err());
+        assert!(builtin_keys("nope").is_err());
+        assert_eq!(builtin_keys("all").unwrap().len(), 3);
+    }
+
+    #[test]
+    fn custom_network_roundtrip() {
+        let net = Network {
+            name: "custom".into(),
+            batch: 128,
+            first_layer: 0,
+            layers: vec![
+                Layer::conv("conv0", "Stem", 3, 64, 7, 56, 56),
+                Layer::fc("fc", "Head", 2048, 1000),
+            ],
+        };
+        let req = AdvisorRequest::custom(net, PrecisionPolicy::paper().with_chunk(Some(32)));
+        let text = req.to_json().to_string();
+        let back = AdvisorRequest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string(), text);
+        let report = back.run().unwrap();
+        assert_eq!(report.chunk(), 32);
+        assert_eq!(report.prediction.layers.len(), 2);
+    }
+}

@@ -1,0 +1,188 @@
+//! Memoized VRR solving.
+//!
+//! Every `min_m_acc` query binary-searches suitability, and every
+//! suitability test evaluates Theorem 1's O(n) crossing sums — so a
+//! Table-1 sweep (three networks × layers × GEMMs × {normal, chunked})
+//! re-pays the same O(n) evaluations over and over, and a batch `serve`
+//! workload pays them once per request. [`SolveCache`] memoizes both the
+//! solver result (keyed on the full [`AccumSpec`]: `(n, m_p, nzr,
+//! chunk)`) and individual VRR evaluations (additionally keyed on
+//! `m_acc`). Cached values are **bit-identical** to direct evaluation —
+//! the cache stores the solver's own output, it never recomputes —
+//! which `rust/tests/api.rs` pins down across a parameter grid.
+//!
+//! A process-wide instance backs the `api` entry points ([`min_m_acc`],
+//! [`vrr`]); independent instances ([`SolveCache::new`]) serve tests and
+//! benchmarks that need cold-cache behaviour.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::vrr::solver::{self, AccumSpec};
+
+/// Hashable image of an [`AccumSpec`] (`nzr` by its bit pattern; `chunk`
+/// `None` encoded as 0, which no valid chunked spec uses).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct SpecKey {
+    n: usize,
+    m_p: u32,
+    nzr_bits: u64,
+    chunk: usize,
+}
+
+impl SpecKey {
+    fn of(spec: &AccumSpec) -> SpecKey {
+        SpecKey {
+            n: spec.n,
+            m_p: spec.m_p,
+            nzr_bits: spec.nzr.to_bits(),
+            chunk: spec.chunk.unwrap_or(0),
+        }
+    }
+}
+
+/// Hit/miss/size counters of a [`SolveCache`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub solve_entries: usize,
+    pub vrr_entries: usize,
+}
+
+/// Memoization table for [`solver::min_m_acc`] and [`AccumSpec::vrr`].
+///
+/// Thread-safe; concurrent misses on the same key may both compute, but
+/// both compute the same deterministic value, so last-insert-wins is
+/// harmless.
+#[derive(Default)]
+pub struct SolveCache {
+    solve: Mutex<HashMap<SpecKey, u32>>,
+    /// VRR values stored as `f64` bits so lookups are exactly the
+    /// computed value (no float round-trip ambiguity).
+    vrr: Mutex<HashMap<(SpecKey, u32), u64>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Per-table entry cap. The cache backs a long-running `serve` process
+/// fed arbitrary custom topologies, so it must not grow without bound;
+/// at the cap the table is flushed (simple, contention-free, and the
+/// steady-state benchmark workloads fit in a small fraction of it).
+pub const MAX_ENTRIES: usize = 1 << 16;
+
+impl SolveCache {
+    pub fn new() -> SolveCache {
+        SolveCache::default()
+    }
+
+    /// Memoized [`solver::min_m_acc`].
+    pub fn min_m_acc(&self, spec: &AccumSpec) -> u32 {
+        let key = SpecKey::of(spec);
+        if let Some(&m) = self.solve.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return m;
+        }
+        // Compute outside the lock: solves take O(n log m_acc), and
+        // sweeps call in from many threads.
+        let m = solver::min_m_acc(spec);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut table = self.solve.lock().unwrap();
+        if table.len() >= MAX_ENTRIES {
+            table.clear();
+        }
+        table.insert(key, m);
+        m
+    }
+
+    /// Memoized [`AccumSpec::vrr`] at accumulator width `m_acc`.
+    pub fn vrr(&self, spec: &AccumSpec, m_acc: u32) -> f64 {
+        let key = (SpecKey::of(spec), m_acc);
+        if let Some(&bits) = self.vrr.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return f64::from_bits(bits);
+        }
+        let v = spec.vrr(m_acc);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut table = self.vrr.lock().unwrap();
+        if table.len() >= MAX_ENTRIES {
+            table.clear();
+        }
+        table.insert(key, v.to_bits());
+        v
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            solve_entries: self.solve.lock().unwrap().len(),
+            vrr_entries: self.vrr.lock().unwrap().len(),
+        }
+    }
+
+    pub fn clear(&self) {
+        self.solve.lock().unwrap().clear();
+        self.vrr.lock().unwrap().clear();
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+}
+
+/// The process-wide cache behind the `api` entry points.
+pub fn global() -> &'static SolveCache {
+    static CACHE: OnceLock<SolveCache> = OnceLock::new();
+    CACHE.get_or_init(SolveCache::default)
+}
+
+/// Memoized minimum accumulator width (process-wide cache).
+pub fn min_m_acc(spec: &AccumSpec) -> u32 {
+    global().min_m_acc(spec)
+}
+
+/// Memoized VRR evaluation (process-wide cache).
+pub fn vrr(spec: &AccumSpec, m_acc: u32) -> f64 {
+    global().vrr(spec, m_acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn second_query_hits() {
+        let cache = SolveCache::new();
+        let spec = AccumSpec::plain(4096);
+        let a = cache.min_m_acc(&spec);
+        let b = cache.min_m_acc(&spec);
+        assert_eq!(a, b);
+        let s = cache.stats();
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.solve_entries, 1);
+    }
+
+    #[test]
+    fn distinct_specs_do_not_collide() {
+        let cache = SolveCache::new();
+        let dense = AccumSpec::plain(1 << 15);
+        let sparse = AccumSpec::plain(1 << 15).with_nzr(0.1);
+        let chunked = AccumSpec::plain(1 << 15).with_chunk(64);
+        let md = cache.min_m_acc(&dense);
+        let ms = cache.min_m_acc(&sparse);
+        let mc = cache.min_m_acc(&chunked);
+        assert_eq!(md, solver::min_m_acc(&dense));
+        assert_eq!(ms, solver::min_m_acc(&sparse));
+        assert_eq!(mc, solver::min_m_acc(&chunked));
+        assert_eq!(cache.stats().solve_entries, 3);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let cache = SolveCache::new();
+        cache.min_m_acc(&AccumSpec::plain(64));
+        cache.clear();
+        assert_eq!(cache.stats(), CacheStats::default());
+    }
+}

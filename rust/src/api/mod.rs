@@ -1,0 +1,56 @@
+//! `abws::api` — the typed entry point to the whole analysis stack.
+//!
+//! The paper's punchline is a *service*: feed in layer shapes, get back
+//! the minimum accumulator widths without brute-force emulation. This
+//! module is that service boundary:
+//!
+//! * [`PrecisionPolicy`] (in [`policy`]) — the one precision
+//!   configuration type, replacing hand-assembled
+//!   `AccumSpec`/`GemmConfig`/`PrecisionPlan`/`NzrModel` quadruples.
+//! * [`AdvisorRequest`] → [`AdvisorReport`] (in [`advisor`]) — per-layer
+//!   and per-group minimum accumulator widths for a builtin or custom
+//!   network, with JSON encode/decode.
+//! * [`TrainRequest`] → [`TrainReport`](train::TrainReport) (in
+//!   [`train`]) — native reduced-precision training runs under a
+//!   baseline / uniform / solver-predicted plan.
+//! * [`cache`] — the memoized VRR solve cache all API queries share, so
+//!   repeated `min_m_acc` sweeps stop re-running the O(n) crossing sums.
+//! * [`serve`] — the batch front-end: newline-delimited JSON requests in,
+//!   one JSON report per line out (`abws serve` on the CLI).
+//!
+//! ```no_run
+//! use abws::api::{AdvisorRequest, PrecisionPolicy};
+//!
+//! let report = AdvisorRequest::builtin("resnet18", PrecisionPolicy::paper())
+//!     .run()
+//!     .unwrap();
+//! println!("{}", report.render());
+//! ```
+
+pub mod advisor;
+pub mod cache;
+pub mod policy;
+pub mod serve;
+pub mod train;
+
+pub use advisor::{advise_builtin, builtin_keys, AdvisorReport, AdvisorRequest, NetworkSpec};
+pub use policy::{baseline_plan, fp8_ideal_acc_plan, PrecisionPolicy};
+pub use serve::{serve, ServeStats};
+pub use train::{PlanSpec, TrainReport, TrainRequest};
+
+/// Strict optional-number accessor for the request codecs: absent or
+/// `null` is `None`, a number is `Some`, anything else is an error — a
+/// type-mismatched field must never silently fall back to a default
+/// (a `serve` client that sends `"steps": "100"` should get an error
+/// line, not a 300-step run).
+pub(crate) fn opt_num(
+    j: &crate::util::json::Json,
+    key: &str,
+) -> anyhow::Result<Option<f64>> {
+    use crate::util::json::Json;
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Num(v)) => Ok(Some(*v)),
+        Some(other) => anyhow::bail!("'{key}' must be a number, got {other}"),
+    }
+}

@@ -1,0 +1,404 @@
+//! [`PrecisionPolicy`] — the one precision configuration type.
+//!
+//! Before the `api` layer, every driver hand-assembled four overlapping
+//! configs: an [`AccumSpec`] for the VRR solver, a [`GemmConfig`] for the
+//! softfloat simulator, a [`PrecisionPlan`] for the trainer and an
+//! [`NzrModel`] for the sparsity correction — each with its own copy of
+//! the paper defaults. `PrecisionPolicy` holds those defaults once
+//! (representation/product/accumulator formats, chunking, rounding,
+//! sparsity) and derives each downstream config on demand.
+
+use anyhow::{bail, Result};
+
+use crate::nets::nzr::{NzrModel, NzrTriple};
+use crate::softfloat::format::FpFormat;
+use crate::softfloat::gemm::GemmConfig;
+use crate::softfloat::quant::Rounding;
+use crate::trainer::native::PrecisionPlan;
+use crate::util::json::Json;
+use crate::vrr::solver::AccumSpec;
+
+/// Chunk size of the advisor's "chunked" column when the policy does not
+/// pin one (the paper's chunk-64 accumulation).
+pub const DEFAULT_ADVISOR_CHUNK: usize = 64;
+
+/// Unified precision configuration for analysis and simulation.
+///
+/// One `PrecisionPolicy` answers every configuration question the stack
+/// asks: what the operands are quantized to ([`Self::repr`]), how exact
+/// the products are ([`Self::prod`], [`Self::m_p`]), what the accumulator
+/// format is ([`Self::acc_exp_bits`] plus a per-query mantissa width),
+/// whether accumulation is chunked ([`Self::chunk`]), how mantissas are
+/// rounded ([`Self::rounding`]) and how sparse the operands are
+/// ([`Self::nzr`]).
+#[derive(Clone, Debug)]
+pub struct PrecisionPolicy {
+    /// Representation format quantizing GEMM *inputs* (`None` = keep f32).
+    pub repr: Option<FpFormat>,
+    /// Product-term format (paper: the exact (1,6,5) product of two
+    /// (1,5,2) values).
+    pub prod: FpFormat,
+    /// Accumulator exponent bits (paper §5: 6).
+    pub acc_exp_bits: u32,
+    /// Product mantissa width used by the VRR analysis (5 for (1,5,2)
+    /// inputs).
+    pub m_p: u32,
+    /// Chunk size for two-level accumulation (`None` = sequential).
+    pub chunk: Option<usize>,
+    /// Mantissa rounding mode of the simulated datapath.
+    pub rounding: Rounding,
+    /// Sparsity model; `None` means "use the network's calibrated default
+    /// (built-ins) or the ReLU default `(1.0, 0.5, 0.5)` (custom nets)".
+    pub nzr: Option<NzrModel>,
+}
+
+impl Default for PrecisionPolicy {
+    fn default() -> Self {
+        PrecisionPolicy::paper()
+    }
+}
+
+impl PrecisionPolicy {
+    /// The paper's configuration: (1,5,2) inputs, exact 5-bit products,
+    /// `(1,6,m_acc)` accumulators, round-to-nearest-even, sequential
+    /// accumulation, network-default sparsity.
+    pub fn paper() -> PrecisionPolicy {
+        PrecisionPolicy {
+            repr: Some(FpFormat::FP8_152),
+            prod: FpFormat::PROD_FP8,
+            acc_exp_bits: 6,
+            m_p: 5,
+            chunk: None,
+            rounding: Rounding::NearestEven,
+            nzr: None,
+        }
+    }
+
+    pub fn with_chunk(mut self, chunk: Option<usize>) -> PrecisionPolicy {
+        self.chunk = chunk;
+        self
+    }
+
+    pub fn with_m_p(mut self, m_p: u32) -> PrecisionPolicy {
+        self.m_p = m_p;
+        self
+    }
+
+    pub fn with_nzr(mut self, nzr: NzrModel) -> PrecisionPolicy {
+        self.nzr = Some(nzr);
+        self
+    }
+
+    pub fn with_rounding(mut self, rounding: Rounding) -> PrecisionPolicy {
+        self.rounding = rounding;
+        self
+    }
+
+    /// Check the policy is physically meaningful before analysis.
+    pub fn validate(&self) -> Result<()> {
+        if self.m_p == 0 || self.m_p > 52 {
+            bail!("policy.m_p must be in 1..=52, got {}", self.m_p);
+        }
+        if !(2..=11).contains(&self.acc_exp_bits) {
+            bail!(
+                "policy.acc_exp_bits must be in 2..=11, got {}",
+                self.acc_exp_bits
+            );
+        }
+        if let Some(c) = self.chunk {
+            if c == 0 {
+                bail!("policy.chunk must be >= 1 (use null for sequential accumulation)");
+            }
+        }
+        if let Some(m) = &self.nzr {
+            let mut triples = vec![("default", m.default)];
+            for (g, t) in &m.per_group {
+                triples.push((g.as_str(), *t));
+            }
+            for (label, t) in triples {
+                for v in [t.fwd, t.bwd, t.grad] {
+                    if !(0.0..=1.0).contains(&v) {
+                        bail!("policy.nzr[{label}] out of [0,1]: {v}");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The VRR solver description of one length-`n` accumulation under
+    /// this policy.
+    pub fn accum_spec(&self, n: usize, nzr: f64) -> AccumSpec {
+        AccumSpec {
+            n,
+            m_p: self.m_p,
+            nzr,
+            chunk: self.chunk,
+        }
+    }
+
+    /// The softfloat GEMM configuration at accumulator width `m_acc`.
+    pub fn gemm_config(&self, m_acc: u32) -> GemmConfig {
+        GemmConfig {
+            repr: self.repr,
+            prod: self.prod,
+            acc: FpFormat::new(self.acc_exp_bits, m_acc),
+            chunk: self.chunk,
+            mode: self.rounding,
+        }
+    }
+
+    /// Trainer plan with one accumulator width for all three GEMMs.
+    pub fn plan_uniform(&self, m_acc: u32) -> PrecisionPlan {
+        let cfg = self.gemm_config(m_acc);
+        PrecisionPlan {
+            fwd: cfg,
+            bwd: cfg,
+            grad: cfg,
+        }
+    }
+
+    /// Trainer plan with per-GEMM accumulator widths (the Table-1 shape).
+    pub fn plan_per_gemm(&self, fwd: u32, bwd: u32, grad: u32) -> PrecisionPlan {
+        PrecisionPlan {
+            fwd: self.gemm_config(fwd),
+            bwd: self.gemm_config(bwd),
+            grad: self.gemm_config(grad),
+        }
+    }
+
+    /// The per-GEMM NZR triple this policy assumes when no per-group
+    /// model applies (custom networks, the trainer's three GEMMs).
+    pub fn nzr_triple(&self) -> NzrTriple {
+        self.nzr
+            .as_ref()
+            .map(|m| m.default)
+            .unwrap_or(DEFAULT_RELU_NZR)
+    }
+
+    /// Serialize to the wire form used by [`crate::api::serve`].
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("m_p", self.m_p);
+        j.set("acc_exp_bits", self.acc_exp_bits);
+        j.set(
+            "chunk",
+            self.chunk.map(Json::from).unwrap_or(Json::Null),
+        );
+        j.set(
+            "repr",
+            self.repr.map(format_to_json).unwrap_or(Json::Null),
+        );
+        j.set("prod", format_to_json(self.prod));
+        j.set(
+            "rounding",
+            match self.rounding {
+                Rounding::NearestEven => "nearest_even",
+                Rounding::TowardZero => "toward_zero",
+            },
+        );
+        j.set(
+            "nzr",
+            self.nzr.as_ref().map(nzr_to_json).unwrap_or(Json::Null),
+        );
+        j
+    }
+
+    /// Parse the wire form; absent or null fields fall back to
+    /// [`PrecisionPolicy::paper`] defaults, type-mismatched fields are
+    /// errors (never silently defaulted).
+    pub fn from_json(j: &Json) -> Result<PrecisionPolicy> {
+        if !matches!(j, Json::Obj(_)) {
+            bail!("'policy' must be an object, got {j}");
+        }
+        let mut p = PrecisionPolicy::paper();
+        if let Some(v) = super::opt_num(j, "m_p")? {
+            p.m_p = v as u32;
+        }
+        if let Some(v) = super::opt_num(j, "acc_exp_bits")? {
+            p.acc_exp_bits = v as u32;
+        }
+        if let Some(v) = super::opt_num(j, "chunk")? {
+            p.chunk = Some(v as usize);
+        }
+        if let Some(f) = j.get("repr") {
+            p.repr = match f {
+                Json::Null => None,
+                other => Some(format_from_json(other)?),
+            };
+        }
+        if let Some(f) = j.get("prod") {
+            p.prod = format_from_json(f)?;
+        }
+        if let Some(r) = j.get("rounding").and_then(Json::as_str) {
+            p.rounding = match r {
+                "nearest_even" => Rounding::NearestEven,
+                "toward_zero" => Rounding::TowardZero,
+                other => bail!("unknown rounding '{other}' (nearest_even|toward_zero)"),
+            };
+        }
+        if let Some(m) = j.get("nzr") {
+            p.nzr = match m {
+                Json::Null => None,
+                other => Some(nzr_from_json(other)?),
+            };
+        }
+        p.validate()?;
+        Ok(p)
+    }
+}
+
+/// Default ReLU-network sparsity when neither the policy nor the network
+/// pins a model: dense FWD operands, half-zero BWD/GRAD operands.
+pub const DEFAULT_RELU_NZR: NzrTriple = NzrTriple {
+    fwd: 1.0,
+    bwd: 0.5,
+    grad: 0.5,
+};
+
+/// Full-precision control plan (the paper's ideal-accumulation baseline).
+pub fn baseline_plan() -> PrecisionPlan {
+    PrecisionPlan::baseline()
+}
+
+/// (1,5,2) representations with ideal accumulation — the fair baseline of
+/// the paper's Fig. 6 (representation effects excluded).
+pub fn fp8_ideal_acc_plan() -> PrecisionPlan {
+    PrecisionPlan::fp8_ideal_acc()
+}
+
+fn format_to_json(f: FpFormat) -> Json {
+    let mut j = Json::obj();
+    j.set("exp_bits", f.exp_bits);
+    j.set("man_bits", f.man_bits);
+    j
+}
+
+fn format_from_json(j: &Json) -> Result<FpFormat> {
+    let exp = j.get("exp_bits").and_then(Json::as_f64);
+    let man = j.get("man_bits").and_then(Json::as_f64);
+    match (exp, man) {
+        (Some(e), Some(m)) => Ok(FpFormat::new(e as u32, m as u32)),
+        _ => bail!("format must be {{\"exp_bits\":E,\"man_bits\":M}}"),
+    }
+}
+
+fn triple_to_json(t: &NzrTriple) -> Json {
+    let mut j = Json::obj();
+    j.set("fwd", t.fwd);
+    j.set("bwd", t.bwd);
+    j.set("grad", t.grad);
+    j
+}
+
+fn triple_from_json(j: &Json) -> Result<NzrTriple> {
+    let g = |k: &str| -> Result<f64> {
+        match j.get(k).and_then(Json::as_f64) {
+            Some(v) => Ok(v),
+            None => bail!("nzr triple missing '{k}'"),
+        }
+    };
+    Ok(NzrTriple {
+        fwd: g("fwd")?,
+        bwd: g("bwd")?,
+        grad: g("grad")?,
+    })
+}
+
+fn nzr_to_json(m: &NzrModel) -> Json {
+    let mut j = Json::obj();
+    j.set("default", triple_to_json(&m.default));
+    let mut groups = Json::obj();
+    for (g, t) in &m.per_group {
+        groups.set(g, triple_to_json(t));
+    }
+    j.set("per_group", groups);
+    j
+}
+
+fn nzr_from_json(j: &Json) -> Result<NzrModel> {
+    let default = match j.get("default") {
+        Some(t) => triple_from_json(t)?,
+        None => bail!("nzr model missing 'default' triple"),
+    };
+    let mut model = NzrModel {
+        default,
+        per_group: Default::default(),
+    };
+    if let Some(Json::Obj(groups)) = j.get("per_group") {
+        for (g, t) in groups {
+            model.per_group.insert(g.clone(), triple_from_json(t)?);
+        }
+    }
+    Ok(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_policy_matches_legacy_configs() {
+        let p = PrecisionPolicy::paper().with_chunk(Some(64));
+        let legacy = GemmConfig::paper(8, Some(64));
+        let derived = p.gemm_config(8);
+        assert_eq!(derived.repr, legacy.repr);
+        assert_eq!(derived.prod, legacy.prod);
+        assert_eq!(derived.acc, legacy.acc);
+        assert_eq!(derived.chunk, legacy.chunk);
+        assert_eq!(derived.mode, legacy.mode);
+
+        let spec = p.accum_spec(4096, 0.5);
+        assert_eq!(spec.n, 4096);
+        assert_eq!(spec.m_p, 5);
+        assert_eq!(spec.chunk, Some(64));
+    }
+
+    #[test]
+    fn plan_builders_match_legacy() {
+        let p = PrecisionPolicy::paper();
+        let uni = p.plan_uniform(12);
+        let legacy = PrecisionPlan::uniform(12, None);
+        assert_eq!(uni.fwd.acc, legacy.fwd.acc);
+        let per = p.plan_per_gemm(9, 8, 15);
+        assert_eq!(per.grad.acc.man_bits, 15);
+        assert_eq!(per.fwd.acc.man_bits, 9);
+    }
+
+    #[test]
+    fn validate_rejects_nonsense() {
+        assert!(PrecisionPolicy::paper().validate().is_ok());
+        assert!(PrecisionPolicy::paper().with_m_p(0).validate().is_err());
+        assert!(PrecisionPolicy::paper()
+            .with_chunk(Some(0))
+            .validate()
+            .is_err());
+        assert!(PrecisionPolicy::paper()
+            .with_nzr(NzrModel::uniform(1.0, 0.5, 1.5))
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = PrecisionPolicy::paper()
+            .with_chunk(Some(128))
+            .with_m_p(7)
+            .with_nzr(NzrModel::uniform(1.0, 0.4, 0.1).with_group("Conv 1", 0.9, 0.3, 0.05));
+        let text = p.to_json().to_string();
+        let back = PrecisionPolicy::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string(), text);
+        assert_eq!(back.m_p, 7);
+        assert_eq!(back.chunk, Some(128));
+        assert_eq!(back.nzr.unwrap().lookup("Conv 1", crate::nets::Gemm::Grad), 0.05);
+    }
+
+    #[test]
+    fn defaults_fill_missing_fields() {
+        let p = PrecisionPolicy::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(p.m_p, 5);
+        assert_eq!(p.chunk, None);
+        assert!(p.nzr.is_none());
+        assert_eq!(p.prod, FpFormat::PROD_FP8);
+    }
+}

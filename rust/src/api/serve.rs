@@ -1,0 +1,111 @@
+//! The batch front door: newline-delimited JSON requests in, one JSON
+//! report per line out.
+//!
+//! Each input line is a JSON object whose `"type"` selects the handler —
+//! `"advisor"` (the default when omitted) or `"train"`. A malformed or
+//! failing request produces an `{"error": "..."}` line *in its position*
+//! and the stream keeps going, so a batch client can zip requests to
+//! responses by line number. All solving shares the process-wide
+//! [`crate::api::cache`], so a sweep of similar requests gets the
+//! memoized fast path after the first.
+
+use std::io::{BufRead, Write};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::advisor::AdvisorRequest;
+use super::train::TrainRequest;
+use crate::util::json::Json;
+
+/// Counters for one [`serve`] session.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Non-empty request lines seen.
+    pub requests: usize,
+    /// Requests answered with an `{"error": ...}` line.
+    pub errors: usize,
+}
+
+/// Handle one request line, returning the report JSON.
+pub fn handle_request(line: &str) -> Result<Json> {
+    let j = Json::parse(line).map_err(|e| anyhow!("bad request JSON: {e}"))?;
+    if !matches!(j, Json::Obj(_)) {
+        bail!("request must be a JSON object");
+    }
+    let ty = match j.get("type") {
+        None => "advisor",
+        Some(Json::Str(s)) => s.as_str(),
+        Some(other) => bail!("'type' must be a string, got {other}"),
+    };
+    match ty {
+        "advisor" => Ok(AdvisorRequest::from_json(&j)?.run()?.to_json()),
+        "train" => Ok(TrainRequest::from_json(&j)?.resolve()?.run().to_json()),
+        other => bail!("unknown request type '{other}' (advisor|train)"),
+    }
+}
+
+/// Serve newline-delimited JSON requests from `input` to `out` until EOF.
+/// Blank lines are skipped; per-request failures become error lines, not
+/// stream failures.
+pub fn serve<R: BufRead, W: Write>(input: R, mut out: W) -> Result<ServeStats> {
+    let mut stats = ServeStats::default();
+    for line in input.lines() {
+        let line = line.context("reading request line")?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        stats.requests += 1;
+        let response = match handle_request(trimmed) {
+            Ok(report) => report,
+            Err(e) => {
+                stats.errors += 1;
+                let mut o = Json::obj();
+                o.set("error", format!("{e:#}"));
+                o
+            }
+        };
+        writeln!(out, "{response}").context("writing response line")?;
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advisor_line_answers() {
+        let out = handle_request(r#"{"type":"advisor","network":"resnet32"}"#).unwrap();
+        assert_eq!(out.get("type").unwrap().as_str(), Some("advisor_report"));
+        assert!(!out.get("layers").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn default_type_is_advisor() {
+        let out = handle_request(r#"{"network":"alexnet"}"#).unwrap();
+        assert_eq!(out.get("type").unwrap().as_str(), Some("advisor_report"));
+    }
+
+    #[test]
+    fn errors_are_lines_not_failures() {
+        let input = "{\"network\":\"resnet32\"}\nnot json\n\n{\"network\":\"resnet18\"}\n";
+        let mut out = Vec::new();
+        let stats = serve(input.as_bytes(), &mut out).unwrap();
+        assert_eq!(stats.requests, 3);
+        assert_eq!(stats.errors, 1);
+        let lines: Vec<&str> = std::str::from_utf8(&out).unwrap().lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[1].contains("error"));
+        assert!(Json::parse(lines[0]).unwrap().get("layers").is_some());
+        assert!(Json::parse(lines[2]).unwrap().get("layers").is_some());
+    }
+
+    #[test]
+    fn unknown_type_is_an_error_line() {
+        let mut out = Vec::new();
+        let stats = serve("{\"type\":\"frobnicate\"}\n".as_bytes(), &mut out).unwrap();
+        assert_eq!(stats.errors, 1);
+        assert!(String::from_utf8(out).unwrap().contains("unknown request type"));
+    }
+}

@@ -1,0 +1,400 @@
+//! Typed training requests: the native bit-accurate trainer behind the
+//! same request/response discipline as the advisor. A [`TrainRequest`]
+//! names the task (synthetic-classification dimensions), the
+//! [`PrecisionPolicy`] and a [`PlanSpec`] (baseline, uniform width, or
+//! the solver's prediction under a precision perturbation); resolving it
+//! yields the concrete [`PrecisionPlan`] plus the chosen per-GEMM widths,
+//! and running it returns a [`TrainReport`] with the metric trace.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::cache;
+use super::policy::PrecisionPolicy;
+use crate::data::synth::{generate, Dataset, SynthSpec};
+use crate::trainer::metrics::RunMetrics;
+use crate::trainer::native::{NativeTrainer, PrecisionPlan, TrainConfig};
+use crate::util::json::Json;
+use crate::vrr::solver::perturbed;
+
+/// How to pick the three GEMM accumulator widths.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanSpec {
+    /// Full-precision control arm (ideal accumulation, no quantization).
+    Baseline,
+    /// One reduced width for all three GEMMs.
+    Uniform { m_acc: u32 },
+    /// The solver's per-GEMM prediction, shifted by a precision
+    /// perturbation (paper Fig. 6: `pp = 0` is the prediction, `-1` one
+    /// bit fewer, …).
+    Predicted { pp: i32 },
+}
+
+/// One training query for the native reduced-precision trainer.
+#[derive(Clone, Debug)]
+pub struct TrainRequest {
+    pub policy: PrecisionPolicy,
+    pub plan: PlanSpec,
+    /// Input dimensionality — also the FWD accumulation length.
+    pub dim: usize,
+    /// Class count — also the BWD accumulation length.
+    pub classes: usize,
+    pub hidden: usize,
+    pub steps: usize,
+    /// Mini-batch size — also the GRAD accumulation length.
+    pub batch: usize,
+    pub seed: u64,
+    pub data_seed: u64,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub noise: f64,
+}
+
+impl Default for TrainRequest {
+    fn default() -> Self {
+        TrainRequest {
+            policy: PrecisionPolicy::paper(),
+            plan: PlanSpec::Predicted { pp: 0 },
+            dim: 256,
+            classes: 10,
+            hidden: 64,
+            steps: 300,
+            batch: 32,
+            seed: 42,
+            data_seed: 1234,
+            n_train: 2048,
+            n_test: 512,
+            noise: 1.0,
+        }
+    }
+}
+
+/// The per-GEMM accumulator mantissa widths a plan resolved to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanWidths {
+    pub fwd: u32,
+    pub bwd: u32,
+    pub grad: u32,
+}
+
+/// A request with its plan made concrete (solver already consulted).
+#[derive(Clone, Debug)]
+pub struct ResolvedTrain {
+    pub req: TrainRequest,
+    pub plan: PrecisionPlan,
+    /// `None` for the baseline arm (widths are the ideal 52 bits).
+    pub widths: Option<PlanWidths>,
+}
+
+impl TrainRequest {
+    /// Validate and turn the [`PlanSpec`] into a concrete plan. The
+    /// `Predicted` arm solves the three GEMM accumulations (FWD over
+    /// `dim`, BWD over `classes`, GRAD over `batch`) through the
+    /// process-wide memoized solver.
+    pub fn resolve(&self) -> Result<ResolvedTrain> {
+        self.policy.validate()?;
+        ensure!(self.dim > 0, "dim must be positive");
+        ensure!(self.classes > 1, "classes must be at least 2");
+        ensure!(self.steps > 0, "steps must be positive");
+        ensure!(self.batch > 0, "batch must be positive");
+        ensure!(self.hidden > 0, "hidden must be positive");
+        let (plan, widths) = match self.plan {
+            PlanSpec::Baseline => (super::policy::baseline_plan(), None),
+            PlanSpec::Uniform { m_acc } => {
+                ensure!(
+                    (1..=52).contains(&m_acc),
+                    "uniform m_acc must be in 1..=52, got {m_acc}"
+                );
+                (
+                    self.policy.plan_uniform(m_acc),
+                    Some(PlanWidths {
+                        fwd: m_acc,
+                        bwd: m_acc,
+                        grad: m_acc,
+                    }),
+                )
+            }
+            PlanSpec::Predicted { pp } => {
+                let t = self.policy.nzr_triple();
+                let fwd = perturbed(
+                    cache::min_m_acc(&self.policy.accum_spec(self.dim, t.fwd)),
+                    pp,
+                );
+                let bwd = perturbed(
+                    cache::min_m_acc(&self.policy.accum_spec(self.classes, t.bwd)),
+                    pp,
+                );
+                let grad = perturbed(
+                    cache::min_m_acc(&self.policy.accum_spec(self.batch, t.grad)),
+                    pp,
+                );
+                (
+                    self.policy.plan_per_gemm(fwd, bwd, grad),
+                    Some(PlanWidths { fwd, bwd, grad }),
+                )
+            }
+        };
+        Ok(ResolvedTrain {
+            req: self.clone(),
+            plan,
+            widths,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("type", "train");
+        j.set("policy", self.policy.to_json());
+        let mut plan = Json::obj();
+        match self.plan {
+            PlanSpec::Baseline => {
+                plan.set("kind", "baseline");
+            }
+            PlanSpec::Uniform { m_acc } => {
+                plan.set("kind", "uniform");
+                plan.set("m_acc", m_acc);
+            }
+            PlanSpec::Predicted { pp } => {
+                plan.set("kind", "predicted");
+                plan.set("pp", pp as i64);
+            }
+        }
+        j.set("plan", plan);
+        j.set("dim", self.dim);
+        j.set("classes", self.classes);
+        j.set("hidden", self.hidden);
+        j.set("steps", self.steps);
+        j.set("batch", self.batch);
+        j.set("seed", self.seed as i64);
+        j.set("data_seed", self.data_seed as i64);
+        j.set("n_train", self.n_train);
+        j.set("n_test", self.n_test);
+        j.set("noise", self.noise);
+        j
+    }
+
+    /// Parse the wire form; absent or null fields keep the defaults,
+    /// type-mismatched fields are errors (never silently defaulted).
+    pub fn from_json(j: &Json) -> Result<TrainRequest> {
+        let mut req = TrainRequest::default();
+        if let Some(p) = j.get("policy") {
+            req.policy = PrecisionPolicy::from_json(p).context("parsing 'policy'")?;
+        }
+        if let Some(p) = j.get("plan") {
+            if !matches!(p, Json::Obj(_)) {
+                bail!("'plan' must be an object like {{\"kind\":\"baseline\"}}, got {p}");
+            }
+            let kind = match p.get("kind") {
+                None => "predicted",
+                Some(Json::Str(s)) => s.as_str(),
+                Some(other) => bail!("'plan.kind' must be a string, got {other}"),
+            };
+            req.plan = match kind {
+                "baseline" => PlanSpec::Baseline,
+                "uniform" => PlanSpec::Uniform {
+                    m_acc: super::opt_num(p, "m_acc")?
+                        .context("uniform plan needs 'm_acc'")?
+                        as u32,
+                },
+                "predicted" => PlanSpec::Predicted {
+                    pp: super::opt_num(p, "pp")?.unwrap_or(0.0) as i32,
+                },
+                other => bail!("unknown plan kind '{other}' (baseline|uniform|predicted)"),
+            };
+        }
+        let num = |k: &str, field: &mut usize| -> Result<()> {
+            if let Some(v) = super::opt_num(j, k)? {
+                *field = v as usize;
+            }
+            Ok(())
+        };
+        num("dim", &mut req.dim)?;
+        num("classes", &mut req.classes)?;
+        num("hidden", &mut req.hidden)?;
+        num("steps", &mut req.steps)?;
+        num("batch", &mut req.batch)?;
+        num("n_train", &mut req.n_train)?;
+        num("n_test", &mut req.n_test)?;
+        if let Some(v) = super::opt_num(j, "seed")? {
+            req.seed = v as u64;
+        }
+        if let Some(v) = super::opt_num(j, "data_seed")? {
+            req.data_seed = v as u64;
+        }
+        if let Some(v) = super::opt_num(j, "noise")? {
+            req.noise = v;
+        }
+        Ok(req)
+    }
+}
+
+impl TrainRequest {
+    /// The synthetic-task specification this request trains on. Sweeps
+    /// whose arms share the data fields can [`generate`] once and pass
+    /// the datasets to [`ResolvedTrain::run_on`] instead of regenerating
+    /// per arm.
+    pub fn dataset_spec(&self) -> SynthSpec {
+        SynthSpec {
+            n_train: self.n_train,
+            n_test: self.n_test,
+            dim: self.dim,
+            classes: self.classes,
+            noise: self.noise,
+            seed: self.data_seed,
+        }
+    }
+}
+
+impl ResolvedTrain {
+    /// Generate the synthetic task, train the native trainer under the
+    /// resolved plan and evaluate on the held-out split.
+    pub fn run(&self) -> TrainReport {
+        let (train, test) = generate(&self.req.dataset_spec());
+        self.run_on(&train, &test)
+    }
+
+    /// [`ResolvedTrain::run`] on caller-provided train/test splits (for
+    /// sweeps that share one deterministic dataset across arms).
+    pub fn run_on(&self, train: &Dataset, test: &Dataset) -> TrainReport {
+        let r = &self.req;
+        let cfg = TrainConfig {
+            hidden: r.hidden,
+            steps: r.steps,
+            batch: r.batch,
+            seed: r.seed,
+            ..Default::default()
+        };
+        let mut trainer = NativeTrainer::new(r.dim, r.classes, self.plan, cfg);
+        let metrics = trainer.train(train);
+        let test_acc = trainer.evaluate(test);
+        TrainReport {
+            widths: self.widths,
+            metrics,
+            test_acc,
+        }
+    }
+}
+
+/// The training answer: resolved widths, the metric trace, held-out
+/// accuracy.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub widths: Option<PlanWidths>,
+    pub metrics: RunMetrics,
+    pub test_acc: f64,
+}
+
+impl TrainReport {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("type", "train_report");
+        match self.widths {
+            Some(w) => {
+                j.set("m_fwd", w.fwd);
+                j.set("m_bwd", w.bwd);
+                j.set("m_grad", w.grad);
+            }
+            None => {
+                j.set("m_fwd", Json::Null);
+                j.set("m_bwd", Json::Null);
+                j.set("m_grad", Json::Null);
+            }
+        }
+        j.set("steps_run", self.metrics.steps.len());
+        j.set(
+            "final_loss",
+            self.metrics.final_loss().unwrap_or(f64::NAN),
+        );
+        j.set("test_acc", self.test_acc);
+        j.set("diverged", self.metrics.diverged);
+        j.set(
+            "loss_curve",
+            self.metrics
+                .to_json()
+                .get("loss")
+                .cloned()
+                .unwrap_or_else(|| Json::Arr(Vec::new())),
+        );
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> TrainRequest {
+        TrainRequest {
+            dim: 32,
+            classes: 4,
+            hidden: 16,
+            steps: 25,
+            batch: 16,
+            n_train: 128,
+            n_test: 64,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn predicted_plan_matches_direct_solve() {
+        let req = tiny();
+        let resolved = req.resolve().unwrap();
+        let w = resolved.widths.unwrap();
+        let direct = crate::vrr::solver::min_m_acc(&req.policy.accum_spec(32, 1.0));
+        assert_eq!(w.fwd, direct);
+        assert_eq!(resolved.plan.fwd.acc.man_bits, w.fwd);
+    }
+
+    #[test]
+    fn uniform_and_baseline_resolve() {
+        let mut req = tiny();
+        req.plan = PlanSpec::Uniform { m_acc: 12 };
+        let w = req.resolve().unwrap().widths.unwrap();
+        assert_eq!((w.fwd, w.bwd, w.grad), (12, 12, 12));
+        req.plan = PlanSpec::Baseline;
+        assert!(req.resolve().unwrap().widths.is_none());
+        req.plan = PlanSpec::Uniform { m_acc: 0 };
+        assert!(req.resolve().is_err());
+    }
+
+    #[test]
+    fn run_produces_metrics() {
+        let mut req = tiny();
+        req.plan = PlanSpec::Uniform { m_acc: 12 };
+        let report = req.resolve().unwrap().run();
+        assert_eq!(report.metrics.steps.len(), 25);
+        assert!((0.0..=1.0).contains(&report.test_acc));
+        let j = report.to_json();
+        assert_eq!(j.get("steps_run").unwrap().as_f64(), Some(25.0));
+        assert!(j.get("loss_curve").unwrap().as_arr().unwrap().len() == 25);
+    }
+
+    #[test]
+    fn type_mismatched_fields_error_instead_of_defaulting() {
+        // A string-typed number (common JSON-producer mistake) must be an
+        // error line from `serve`, not a silently-defaulted run.
+        let j = Json::parse(r#"{"type":"train","steps":"100"}"#).unwrap();
+        assert!(TrainRequest::from_json(&j).is_err());
+        let p = Json::parse(r#"{"m_p":"7"}"#).unwrap();
+        assert!(PrecisionPolicy::from_json(&p).is_err());
+        let plan = Json::parse(r#"{"plan":{"kind":"uniform","m_acc":"8"}}"#).unwrap();
+        assert!(TrainRequest::from_json(&plan).is_err());
+        // A plan that isn't an object (or whose kind isn't a string) must
+        // not silently become Predicted{pp:0}.
+        let s = Json::parse(r#"{"plan":"baseline"}"#).unwrap();
+        assert!(TrainRequest::from_json(&s).is_err());
+        let k = Json::parse(r#"{"plan":{"kind":123}}"#).unwrap();
+        assert!(TrainRequest::from_json(&k).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut req = tiny();
+        req.plan = PlanSpec::Predicted { pp: -2 };
+        let text = req.to_json().to_string();
+        let back = TrainRequest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string(), text);
+        assert_eq!(back.plan, PlanSpec::Predicted { pp: -2 });
+        assert_eq!(back.dim, 32);
+    }
+}

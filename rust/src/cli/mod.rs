@@ -1,4 +1,4 @@
-//! The `abws` command-line interface.
+//! The `abws` command-line interface — a thin shell over [`crate::api`].
 //!
 //! ```text
 //! abws predict [--net all|resnet32|resnet18|alexnet] [--chunk 64] [--mp 5]
@@ -7,21 +7,27 @@
 //! abws mc [--n 16384] [--maccs 5,6,8] [--trials 256] [--chunk 64]
 //! abws train [--mode native|aot] [--macc 12 | --pp -1] [--chunk 64]
 //!            [--steps 300] [--dim 256] [--hidden 64] [--seed 42]
+//! abws serve
 //! abws list
 //! abws info
 //! ```
+//!
+//! `serve` is the batch front door: it reads newline-delimited JSON
+//! requests from stdin and writes one JSON report per line to stdout.
+//!
+//! ```text
+//! $ echo '{"type":"advisor","network":"resnet32","policy":{"chunk":64}}' | abws serve
+//! {"chunk":64,"gemms":["FWD","BWD","GRAD"],"groups":[...],"layers":[...],
+//!  "network":"CIFAR-10 ResNet-32","type":"advisor_report"}
+//! ```
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
+use crate::api::{self, PlanSpec, PrecisionPolicy, TrainRequest};
 use crate::coordinator::registry;
-use crate::data::synth::{generate, SynthSpec};
 use crate::hw::fpu::{FpuAreaModel, FpuConfig};
 use crate::hw::report;
 use crate::mc::validate;
-use crate::nets::nzr::NzrModel;
-use crate::nets::predict::predict_network;
-use crate::nets::{alexnet, resnet};
-use crate::trainer::native::{NativeTrainer, PrecisionPlan, TrainConfig};
 use crate::util::argparse::Args;
 use crate::vrr;
 
@@ -33,6 +39,7 @@ pub fn run(args: Args) -> Result<()> {
         Some("area") => cmd_area(),
         Some("mc") => cmd_mc(&args),
         Some("train") => cmd_train(&args),
+        Some("serve") => cmd_serve(),
         Some("list") => {
             print!("{}", registry::render_catalog());
             Ok(())
@@ -46,37 +53,39 @@ pub fn run(args: Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: abws <predict|vrr|area|mc|train|list|info> [options]
+const USAGE: &str = "usage: abws <predict|vrr|area|mc|train|serve|list|info> [options]
   predict  — Table 1: per-layer-group accumulation precision predictions
   vrr      — evaluate VRR / v(n) for one accumulation setup
   area     — Fig 1b: FPU area model ladder
   mc       — Monte-Carlo validation of the VRR formulas
   train    — reduced-precision training run (native bit-accurate or AOT/PJRT)
+  serve    — batch mode: NDJSON advisor/train requests on stdin -> reports on stdout
   list     — catalog of reproducible experiments
   info     — PJRT runtime info";
 
-fn networks_for(name: &str) -> Result<Vec<(crate::nets::Network, NzrModel)>> {
-    Ok(match name {
-        "resnet32" => vec![(resnet::resnet32_cifar10(), NzrModel::resnet_default())],
-        "resnet18" => vec![(resnet::resnet18_imagenet(), NzrModel::resnet_default())],
-        "alexnet" => vec![(alexnet::alexnet_imagenet(), NzrModel::alexnet_default())],
-        "all" => vec![
-            (resnet::resnet32_cifar10(), NzrModel::resnet_default()),
-            (resnet::resnet18_imagenet(), NzrModel::resnet_default()),
-            (alexnet::alexnet_imagenet(), NzrModel::alexnet_default()),
-        ],
-        other => bail!("unknown network '{other}' (resnet32|resnet18|alexnet|all)"),
-    })
+/// Parse `--chunk` into an optional chunk size with a usable error
+/// (previously `.parse().unwrap()` panicked on bad input).
+fn parse_chunk(args: &Args) -> Result<Option<usize>> {
+    match args.get("chunk") {
+        None => Ok(None),
+        Some(s) => {
+            let c: usize = s.parse().map_err(|_| {
+                anyhow!("--chunk expects a positive integer chunk size, got '{s}' (e.g. --chunk 64)")
+            })?;
+            ensure!(c >= 1, "--chunk must be at least 1, got {c}");
+            Ok(Some(c))
+        }
+    }
 }
 
 fn cmd_predict(args: &Args) -> Result<()> {
-    let m_p = args.get_u32("mp", 5);
-    let chunk = args.get_usize("chunk", 64);
-    for (net, nzr) in networks_for(args.get_or("net", "all"))? {
-        let pred = predict_network(&net, &nzr, m_p, chunk);
-        println!("{}", pred.render());
+    let policy = PrecisionPolicy::paper()
+        .with_m_p(args.get_u32("mp", 5))
+        .with_chunk(Some(parse_chunk(args)?.unwrap_or(64)));
+    for report in api::advise_builtin(args.get_or("net", "all"), &policy)? {
+        println!("{}", report.render());
         if args.flag("detail") {
-            for lp in &pred.layers {
+            for lp in &report.prediction.layers {
                 println!(
                     "  {:<12} {:<12} fwd n={:<8} bwd n={:<8} grad n={:<8}",
                     lp.layer, lp.group, lp.lengths.fwd, lp.lengths.bwd, lp.lengths.grad
@@ -89,23 +98,23 @@ fn cmd_predict(args: &Args) -> Result<()> {
 
 fn cmd_vrr(args: &Args) -> Result<()> {
     let m_acc = args.get_u32("macc", 12);
-    let m_p = args.get_u32("mp", 5);
     let n = args.get_usize("n", 4096);
     let nzr = args.get_f64("nzr", 1.0);
-    let spec = crate::vrr::solver::AccumSpec {
-        n,
-        m_p,
-        nzr,
-        chunk: args.get("chunk").map(|c| c.parse().unwrap()),
-    };
-    let v = spec.vrr(m_acc);
+    let policy = PrecisionPolicy::paper()
+        .with_m_p(args.get_u32("mp", 5))
+        .with_chunk(parse_chunk(args)?);
+    let spec = policy.accum_spec(n, nzr);
+    let v = api::cache::vrr(&spec, m_acc);
     let log_v = vrr::variance_lost::log_variance_lost(v, spec.n_eff());
-    println!("VRR(m_acc={m_acc}, m_p={m_p}, n={n}, nzr={nzr}, chunk={:?}) = {v:.6}", spec.chunk);
+    println!(
+        "VRR(m_acc={m_acc}, m_p={}, n={n}, nzr={nzr}, chunk={:?}) = {v:.6}",
+        policy.m_p, spec.chunk
+    );
     println!("log v(n) = {log_v:.3} (cutoff ln 50 = {:.3})", vrr::CUTOFF_LN);
     println!(
         "suitable: {}; minimum m_acc for this accumulation: {}",
         spec.suitable(m_acc),
-        vrr::solver::min_m_acc(&spec)
+        api::cache::min_m_acc(&spec)
     );
     Ok(())
 }
@@ -133,7 +142,7 @@ fn cmd_mc(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 16_384);
     let maccs = args.get_u32_list("maccs", &[5, 6, 8, 10]);
     let trials = args.get_usize("trials", 256);
-    let chunk = args.get("chunk").map(|c| c.parse().unwrap());
+    let chunk = parse_chunk(args)?;
     let seed = args.get_i64("seed", 0x5eed) as u64;
     let pts = validate::validate_grid(&maccs, &[n], chunk, trials, seed);
     print!("{}", validate::render(&pts));
@@ -141,95 +150,92 @@ fn cmd_mc(args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let dim = args.get_usize("dim", 256);
-    let steps = args.get_usize("steps", 300);
-    let chunk = args.get("chunk").map(|c| c.parse().unwrap());
-    let classes = 10;
-    let spec = SynthSpec {
-        dim,
-        classes,
-        seed: args.get_i64("data-seed", 1234) as u64,
-        ..Default::default()
+    let plan = if let Some(m) = args.get("macc") {
+        PlanSpec::Uniform {
+            m_acc: m.parse().map_err(|_| {
+                anyhow!("--macc expects an integer mantissa width, got '{m}' (e.g. --macc 12)")
+            })?,
+        }
+    } else {
+        PlanSpec::Predicted {
+            pp: args.get_i64("pp", 0) as i32,
+        }
     };
-
-    let cfg = TrainConfig {
+    let req = TrainRequest {
+        policy: PrecisionPolicy::paper().with_chunk(parse_chunk(args)?),
+        plan,
+        dim: args.get_usize("dim", 256),
         hidden: args.get_usize("hidden", 64),
-        steps,
+        steps: args.get_usize("steps", 300),
         batch: args.get_usize("batch", 32),
         seed: args.get_i64("seed", 42) as u64,
+        data_seed: args.get_i64("data-seed", 1234) as u64,
         ..Default::default()
     };
 
     // Precision plan: explicit --macc, or the solver's prediction (+ --pp).
-    let plan = if let Some(m) = args.get("macc") {
-        PrecisionPlan::uniform(m.parse()?, chunk)
-    } else {
-        let pp = args.get_i64("pp", 0) as i32;
-        let spec_fwd = crate::vrr::solver::AccumSpec {
-            n: dim,
-            m_p: 5,
-            nzr: 1.0,
-            chunk,
-        };
-        let spec_bwd = crate::vrr::solver::AccumSpec {
-            n: classes,
-            m_p: 5,
-            nzr: 0.5,
-            chunk,
-        };
-        let spec_grad = crate::vrr::solver::AccumSpec {
-            n: cfg.batch,
-            m_p: 5,
-            nzr: 0.5,
-            chunk,
-        };
-        let plan = PrecisionPlan::per_gemm(
-            crate::vrr::solver::perturbed(crate::vrr::solver::min_m_acc(&spec_fwd), pp),
-            crate::vrr::solver::perturbed(crate::vrr::solver::min_m_acc(&spec_bwd), pp),
-            crate::vrr::solver::perturbed(crate::vrr::solver::min_m_acc(&spec_grad), pp),
-            chunk,
-        );
+    let resolved = req.resolve()?;
+    if let (PlanSpec::Predicted { pp }, Some(w)) = (req.plan, &resolved.widths) {
         println!(
             "predicted m_acc (pp={pp}): fwd={} bwd={} grad={}",
-            plan.fwd.acc.man_bits, plan.bwd.acc.man_bits, plan.grad.acc.man_bits
+            w.fwd, w.bwd, w.grad
         );
-        plan
-    };
+    }
 
     match args.get_or("mode", "native") {
         "native" => {
-            let (train, test) = generate(&spec);
-            let mut t = NativeTrainer::new(dim, classes, plan, cfg);
-            let m = t.train(&train);
-            let test_acc = t.evaluate(&test);
-            report_run(&m, test_acc, steps);
+            let report = resolved.run();
+            report_run(&report.metrics, report.test_acc, req.steps);
         }
-        "aot" => {
-            let store =
-                crate::runtime::ArtifactStore::open(args.get_or("artifacts", "artifacts"))?;
-            store.verify()?;
-            let rt = crate::runtime::Runtime::cpu()?;
-            let variant = args.get_or("variant", "baseline").to_string();
-            let mut exec =
-                crate::runtime::TrainStepExecutor::new(&rt, &store, &variant, cfg.seed)?;
-            let d = exec.dims;
-            let (train, test) = generate(&SynthSpec {
-                dim: d.dim,
-                classes: d.classes,
-                ..spec
-            });
-            let m = exec.train(&train, steps)?;
-            // Evaluate with the native forward on the trained params.
-            let (w1, w2) = exec.params()?;
-            let mut nt = NativeTrainer::new(d.dim, d.classes, PrecisionPlan::baseline(), cfg);
-            nt.w1 = w1;
-            nt.w2 = w2;
-            let test_acc = nt.evaluate(&test);
-            report_run(&m, test_acc, steps);
-        }
+        "aot" => run_aot(args, &req)?,
         other => bail!("unknown mode '{other}' (native|aot)"),
     }
     Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn run_aot(args: &Args, req: &TrainRequest) -> Result<()> {
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::trainer::native::{NativeTrainer, TrainConfig};
+
+    let store = crate::runtime::ArtifactStore::open(args.get_or("artifacts", "artifacts"))?;
+    store.verify()?;
+    let rt = crate::runtime::Runtime::cpu()?;
+    let variant = args.get_or("variant", "baseline").to_string();
+    let mut exec = crate::runtime::TrainStepExecutor::new(&rt, &store, &variant, req.seed)?;
+    let d = exec.dims;
+    let (train, test) = generate(&SynthSpec {
+        dim: d.dim,
+        classes: d.classes,
+        n_train: req.n_train,
+        n_test: req.n_test,
+        noise: req.noise,
+        seed: req.data_seed,
+    });
+    let m = exec.train(&train, req.steps)?;
+    // Evaluate with the native forward on the trained params.
+    let (w1, w2) = exec.params()?;
+    let cfg = TrainConfig {
+        hidden: req.hidden,
+        steps: req.steps,
+        batch: req.batch,
+        seed: req.seed,
+        ..Default::default()
+    };
+    let mut nt = NativeTrainer::new(d.dim, d.classes, api::baseline_plan(), cfg);
+    nt.w1 = w1;
+    nt.w2 = w2;
+    let test_acc = nt.evaluate(&test);
+    report_run(&m, test_acc, req.steps);
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_aot(_args: &Args, _req: &TrainRequest) -> Result<()> {
+    bail!(
+        "this build has no PJRT runtime — rebuild with `--features pjrt` \
+         (and the vendored `xla` dependency) to run AOT artifacts"
+    )
 }
 
 fn report_run(m: &crate::trainer::RunMetrics, test_acc: f64, steps: usize) {
@@ -248,8 +254,57 @@ fn report_run(m: &crate::trainer::RunMetrics, test_acc: f64, steps: usize) {
     println!("test-acc {test_acc:.4}  diverged: {}", m.diverged);
 }
 
+fn cmd_serve() -> Result<()> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let stats = api::serve(stdin.lock(), stdout.lock())?;
+    eprintln!(
+        "served {} request(s), {} error(s)",
+        stats.requests, stats.errors
+    );
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_info() -> Result<()> {
     let rt = crate::runtime::Runtime::cpu()?;
     println!("PJRT platform: {}", rt.platform());
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_info() -> Result<()> {
+    bail!("this build has no PJRT runtime — rebuild with `--features pjrt` for `abws info`")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn chunk_parses_or_errors_cleanly() {
+        assert_eq!(parse_chunk(&args(&[])).unwrap(), None);
+        assert_eq!(parse_chunk(&args(&["--chunk", "64"])).unwrap(), Some(64));
+        let err = parse_chunk(&args(&["--chunk", "banana"])).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--chunk"), "{msg}");
+        assert!(msg.contains("banana"), "{msg}");
+        assert!(parse_chunk(&args(&["--chunk", "0"])).is_err());
+    }
+
+    #[test]
+    fn bad_macc_is_an_error_not_a_panic() {
+        let e = cmd_train(&args(&["train", "--macc", "noon"])).unwrap_err();
+        assert!(format!("{e:#}").contains("--macc"));
+    }
+
+    #[test]
+    fn unknown_command_lists_usage() {
+        let e = run(args(&["frobnicate"])).unwrap_err();
+        assert!(format!("{e:#}").contains("usage:"));
+    }
 }

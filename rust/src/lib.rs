@@ -1,26 +1,67 @@
 //! # abws — Accumulation Bit-Width Scaling
 //!
-//! Reproduction of *"Accumulation Bit-Width Scaling For Ultra-Low Precision
-//! Training Of Deep Networks"* (Sakr et al., ICLR 2019).
+//! Reproduction of *"Accumulation Bit-Width Scaling For Ultra-Low
+//! Precision Training Of Deep Networks"* (Sakr et al., ICLR 2019), grown
+//! into a precision-advisory service: feed in layer shapes, get back the
+//! minimum accumulator mantissa widths — "without computationally
+//! prohibitive brute-force emulations".
 //!
-//! The crate is organised as a three-layer stack:
+//! ## The `api` layer
 //!
-//! * **Layer 3 (this crate)** — the analysis + coordination layer: the
-//!   variance-retention-ratio (VRR) theory ([`vrr`]), a bit-accurate
-//!   reduced-precision floating-point simulator ([`softfloat`]), network
-//!   topology models ([`nets`]), the FPU area model ([`hw`]), Monte-Carlo
-//!   validation ([`mc`]), a pure-Rust reduced-precision trainer
-//!   ([`trainer`]) and the experiment coordinator ([`coordinator`]).
-//! * **Layer 2 (python/compile/model.py)** — a JAX model whose forward and
-//!   backward GEMMs use the reduced-precision accumulation kernel, lowered
-//!   once to HLO text artifacts.
-//! * **Layer 1 (python/compile/kernels/)** — the Pallas kernel implementing
-//!   chunked reduced-precision accumulation, verified against a pure-jnp
-//!   oracle.
+//! [`api`] is the single typed entry point to the stack. A
+//! [`api::PrecisionPolicy`] carries the whole precision configuration
+//! (representation/product/accumulator formats, chunking, rounding,
+//! sparsity); typed requests go in, typed reports come out, and every
+//! solve is memoized behind [`api::cache`]:
 //!
-//! The [`runtime`] module loads the AOT artifacts and executes them on the
-//! PJRT CPU client; Python is never on the run path.
+//! ```no_run
+//! use abws::api::{AdvisorRequest, PrecisionPolicy};
+//!
+//! let policy = PrecisionPolicy::paper().with_chunk(Some(64));
+//! let report = AdvisorRequest::builtin("resnet18", policy).run().unwrap();
+//! println!("{}", report.render()); // the paper's Table-1 row
+//! ```
+//!
+//! Batch traffic goes through `abws serve` ([`api::serve`]), which maps
+//! newline-delimited JSON requests to newline-delimited JSON reports:
+//!
+//! ```text
+//! $ abws serve <<'EOF'
+//! {"type":"advisor","network":"resnet32","policy":{"chunk":64}}
+//! {"type":"advisor","network":{"name":"mine","batch":256,"layers":[
+//!    {"kind":"conv","c_in":3,"c_out":64,"kernel":7,"h_out":112},
+//!    {"kind":"fc","c_in":2048,"c_out":1000}]}}
+//! {"type":"train","plan":{"kind":"predicted","pp":-1},"steps":100}
+//! EOF
+//! {"chunk":64,...,"network":"CIFAR-10 ResNet-32","type":"advisor_report"}
+//! {"chunk":64,...,"network":"mine","type":"advisor_report"}
+//! {"diverged":false,...,"type":"train_report"}
+//! ```
+//!
+//! Every report line answers the request on the same input line; bad
+//! requests produce `{"error": ...}` lines without stopping the stream.
+//!
+//! ## The analysis stack underneath
+//!
+//! * **Layer 3 (this crate)** — the variance-retention-ratio (VRR)
+//!   theory ([`vrr`]), a bit-accurate reduced-precision floating-point
+//!   simulator ([`softfloat`]), network topology models ([`nets`]), the
+//!   FPU area model ([`hw`]), Monte-Carlo validation ([`mc`]), a
+//!   pure-Rust reduced-precision trainer ([`trainer`]) and the
+//!   experiment coordinator ([`coordinator`]).
+//! * **Layer 2 (python/compile/model.py)** — a JAX model whose forward
+//!   and backward GEMMs use the reduced-precision accumulation kernel,
+//!   lowered once to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels/)** — the Pallas kernel
+//!   implementing chunked reduced-precision accumulation, verified
+//!   against a pure-jnp oracle.
+//!
+//! The [`runtime`] module loads the AOT artifacts and executes them on
+//! the PJRT CPU client (cargo feature `pjrt`; without it the runtime is
+//! reduced to artifact discovery and the rest of the crate is fully
+//! self-contained).
 
+pub mod api;
 pub mod cli;
 pub mod coordinator;
 pub mod data;

@@ -29,6 +29,16 @@ impl Gemm {
             Gemm::Grad => "GRAD",
         }
     }
+
+    /// Inverse of [`Gemm::name`] (used by the `api` JSON codecs).
+    pub fn from_name(name: &str) -> Option<Gemm> {
+        match name {
+            "FWD" => Some(Gemm::Fwd),
+            "BWD" => Some(Gemm::Bwd),
+            "GRAD" => Some(Gemm::Grad),
+            _ => None,
+        }
+    }
 }
 
 /// The three accumulation lengths of one layer.
@@ -120,5 +130,13 @@ mod tests {
         assert_eq!(a.get(Gemm::Bwd), 2);
         assert_eq!(a.get(Gemm::Grad), 3);
         assert_eq!(Gemm::ALL.len(), 3);
+    }
+
+    #[test]
+    fn gemm_name_roundtrip() {
+        for g in Gemm::ALL {
+            assert_eq!(Gemm::from_name(g.name()), Some(g));
+        }
+        assert_eq!(Gemm::from_name("fwd"), None);
     }
 }

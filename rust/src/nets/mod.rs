@@ -12,4 +12,4 @@ pub mod resnet;
 
 pub use layer::{Layer, LayerKind, Network};
 pub use lengths::{accum_lengths, AccumLengths, Gemm};
-pub use predict::{predict_network, LayerPrediction, NetworkPrediction};
+pub use predict::{predict_network, predict_network_with, LayerPrediction, NetworkPrediction};

@@ -49,6 +49,22 @@ pub fn predict_network(
     m_p: u32,
     chunk: usize,
 ) -> NetworkPrediction {
+    predict_network_with(net, nzr, m_p, chunk, min_m_acc)
+}
+
+/// [`predict_network`] with a pluggable solver, so callers can route the
+/// per-GEMM `min_m_acc` queries through a memoized cache
+/// ([`crate::api::cache`]) instead of solving each from scratch.
+pub fn predict_network_with<F>(
+    net: &Network,
+    nzr: &NzrModel,
+    m_p: u32,
+    chunk: usize,
+    solve: F,
+) -> NetworkPrediction
+where
+    F: Fn(&AccumSpec) -> u32,
+{
     let mut layers = Vec::new();
     for (idx, layer) in net.layers.iter().enumerate() {
         let lengths = accum_lengths(net, layer);
@@ -64,8 +80,8 @@ pub fn predict_network(
                 nzr: nzr.lookup(&layer.group, gemm),
                 chunk: None,
             };
-            let normal = min_m_acc(&spec);
-            let chunked = min_m_acc(&spec.with_chunk(chunk));
+            let normal = solve(&spec);
+            let chunked = solve(&spec.with_chunk(chunk));
             per_gemm.insert(
                 gemm.name(),
                 Some(Prediction { normal, chunked }),
@@ -119,6 +135,12 @@ impl NetworkPrediction {
             .collect();
         out.push_str(&format!("{}\n", header.join(" | ")));
         for gemm in ["FWD", "BWD", "GRAD"] {
+            // A key absent from *every* group means the GEMM was filtered
+            // out of this prediction (api `gemms` narrowing) — skip the
+            // row. `Some(None)` stays an N/A cell, not a missing row.
+            if !self.groups.iter().any(|(_, agg)| agg.contains_key(gemm)) {
+                continue;
+            }
             let mut row = vec![gemm.to_string()];
             for (_, agg) in &self.groups {
                 row.push(match agg.get(gemm) {

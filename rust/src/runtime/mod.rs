@@ -2,11 +2,22 @@
 //! `python/compile/aot.py` and executes them on the CPU PJRT client —
 //! Python is never on this path (see /opt/xla-example/load_hlo for the
 //! interchange rationale: HLO *text*, not serialized protos).
+//!
+//! The PJRT-backed pieces ([`client`], [`exec`]) need the external `xla`
+//! bindings crate and a libxla install, so they are gated behind the
+//! `pjrt` cargo feature; the pure-Rust artifact registry ([`artifact`])
+//! is always available. Builds without the feature still discover and
+//! verify artifact directories — they just cannot execute them, and the
+//! CLI reports that with a clear error instead of failing to link.
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod exec;
 
 pub use artifact::ArtifactStore;
+#[cfg(feature = "pjrt")]
 pub use client::Runtime;
+#[cfg(feature = "pjrt")]
 pub use exec::TrainStepExecutor;

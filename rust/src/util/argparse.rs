@@ -1,15 +1,17 @@
 //! Tiny command-line argument parser (no `clap` in the offline build).
 //!
 //! Supports `--flag`, `--key value`, `--key=value` and positional
-//! arguments, with typed getters and error messages listing valid keys.
-
-use std::collections::BTreeMap;
+//! arguments, with typed getters. Options may repeat: [`Args::get`]
+//! returns the last value (flag-override semantics), [`Args::get_all`]
+//! returns every value in argv order (repeatable options like the
+//! precision advisor's `--conv`/`--fc` layer lists).
 
 /// Parsed arguments: positionals in order plus `--key` options.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
     pub positional: Vec<String>,
-    options: BTreeMap<String, String>,
+    /// `(key, value)` pairs in argv order — repeats preserved.
+    options: Vec<(String, String)>,
     flags: Vec<String>,
 }
 
@@ -21,14 +23,14 @@ impl Args {
         while let Some(tok) = iter.next() {
             if let Some(rest) = tok.strip_prefix("--") {
                 if let Some((k, v)) = rest.split_once('=') {
-                    args.options.insert(k.to_string(), v.to_string());
+                    args.options.push((k.to_string(), v.to_string()));
                 } else if iter
                     .peek()
                     .map(|nxt| !nxt.starts_with("--"))
                     .unwrap_or(false)
                 {
                     let v = iter.next().unwrap();
-                    args.options.insert(rest.to_string(), v);
+                    args.options.push((rest.to_string(), v));
                 } else {
                     args.flags.push(rest.to_string());
                 }
@@ -48,8 +50,29 @@ impl Args {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Last value given for `name` (later occurrences override earlier).
     pub fn get(&self, name: &str) -> Option<&str> {
-        self.options.get(name).map(|s| s.as_str())
+        self.options
+            .iter()
+            .rev()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Every value given for `name`, in argv order. Empty if absent.
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.options
+            .iter()
+            .filter(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+            .collect()
+    }
+
+    /// All `(key, value)` options in argv order — for callers that
+    /// interleave several repeatable options and need the global order
+    /// (e.g. `--conv a --fc b --conv c` as three layers in sequence).
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.options.iter().map(|(k, v)| (k.as_str(), v.as_str()))
     }
 
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
@@ -146,5 +169,25 @@ mod tests {
     fn negative_numbers_as_values() {
         let a = parse(&["--pp", "-2"]);
         assert_eq!(a.get_i64("pp", 0), -2);
+    }
+
+    #[test]
+    fn repeated_options_last_wins_for_get() {
+        let a = parse(&["--chunk", "32", "--chunk", "64"]);
+        assert_eq!(a.get("chunk"), Some("64"));
+        assert_eq!(a.get_usize("chunk", 0), 64);
+    }
+
+    #[test]
+    fn get_all_preserves_order_and_repeats() {
+        let a = parse(&[
+            "--conv", "3x64x7x112", "--fc", "4096x1000", "--conv", "64x128x3x56",
+        ]);
+        assert_eq!(a.get_all("conv"), vec!["3x64x7x112", "64x128x3x56"]);
+        assert_eq!(a.get_all("fc"), vec!["4096x1000"]);
+        assert!(a.get_all("pool").is_empty());
+        // entries() keeps the *cross-key* argv order.
+        let keys: Vec<&str> = a.entries().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["conv", "fc", "conv"]);
     }
 }

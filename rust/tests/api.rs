@@ -1,0 +1,183 @@
+//! Integration tests for the `abws::api` advisory layer: memoized
+//! solving must be bit-identical to direct evaluation, the request/report
+//! types must round-trip through JSON, and the `serve` front-end must
+//! answer batches.
+
+use abws::api::cache::SolveCache;
+use abws::api::{serve, AdvisorReport, AdvisorRequest, PlanSpec, PrecisionPolicy, TrainRequest};
+use abws::nets::layer::{Layer, Network};
+use abws::util::json::Json;
+use abws::vrr::solver::{min_m_acc, AccumSpec};
+
+/// Satellite requirement: cached `min_m_acc`/`vrr` results must be
+/// bit-identical to direct evaluation across a grid of
+/// `(m_acc, m_p, n, nzr, chunk)` — on both the miss and the hit path.
+#[test]
+fn cached_solves_are_bit_identical_across_grid() {
+    let cache = SolveCache::new();
+    for m_p in [2u32, 5, 7] {
+        for n in [27usize, 64, 1_000, 4_096, 1 << 15] {
+            for nzr in [1.0, 0.5, 0.05] {
+                for chunk in [None, Some(64), Some(256)] {
+                    let spec = AccumSpec { n, m_p, nzr, chunk };
+                    let direct = min_m_acc(&spec);
+                    // First call misses, second must hit — both identical.
+                    assert_eq!(cache.min_m_acc(&spec), direct, "{spec:?} (miss)");
+                    assert_eq!(cache.min_m_acc(&spec), direct, "{spec:?} (hit)");
+                    for m_acc in [4u32, 8, 12] {
+                        let want = spec.vrr(m_acc).to_bits();
+                        assert_eq!(
+                            cache.vrr(&spec, m_acc).to_bits(),
+                            want,
+                            "{spec:?} m_acc={m_acc} (miss)"
+                        );
+                        assert_eq!(
+                            cache.vrr(&spec, m_acc).to_bits(),
+                            want,
+                            "{spec:?} m_acc={m_acc} (hit)"
+                        );
+                    }
+                }
+            }
+        }
+    }
+    let stats = cache.stats();
+    let grid: usize = 3 * 5 * 3 * 3;
+    assert_eq!(stats.solve_entries, grid);
+    assert_eq!(stats.vrr_entries, grid * 3);
+    // One hit per repeated solve + three per repeated vrr query.
+    assert_eq!(stats.misses, (grid + grid * 3) as u64);
+    assert_eq!(stats.hits, (grid + grid * 3) as u64);
+}
+
+fn small_custom_net(fc_in: usize) -> Network {
+    Network {
+        name: "custom".into(),
+        batch: 64,
+        first_layer: 0,
+        layers: vec![
+            Layer::conv("conv0", "Stem", 3, 16, 3, 16, 16),
+            Layer::fc("fc", "Head", fc_in, 100),
+        ],
+    }
+}
+
+#[test]
+fn advisor_request_roundtrips_through_json() {
+    let reqs = [
+        AdvisorRequest::builtin("resnet18", PrecisionPolicy::paper().with_chunk(Some(64))),
+        AdvisorRequest::custom(
+            small_custom_net(512),
+            PrecisionPolicy::paper().with_m_p(4),
+        ),
+    ];
+    for req in reqs {
+        let text = req.to_json().to_string();
+        let back = AdvisorRequest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string(), text);
+    }
+}
+
+#[test]
+fn advisor_report_roundtrips_through_json() {
+    let report = AdvisorRequest::custom(small_custom_net(512), PrecisionPolicy::paper())
+        .run()
+        .unwrap();
+    let text = report.to_json().to_string();
+    let back = AdvisorReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back.to_json().to_string(), text);
+    assert_eq!(back.render(), report.render());
+    assert_eq!(
+        back.prediction.group_prediction("Head", "GRAD"),
+        report.prediction.group_prediction("Head", "GRAD")
+    );
+}
+
+#[test]
+fn train_request_roundtrips_through_json() {
+    let req = TrainRequest {
+        plan: PlanSpec::Predicted { pp: -1 },
+        dim: 64,
+        steps: 10,
+        ..Default::default()
+    };
+    let text = req.to_json().to_string();
+    let back = TrainRequest::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back.to_json().to_string(), text);
+}
+
+/// Acceptance criterion: `serve` answers a batch of ≥ 100 NDJSON
+/// `AdvisorRequest` lines with per-layer `m_acc` predictions.
+#[test]
+fn serve_answers_a_batch_of_100_requests() {
+    let mut input = String::new();
+    // 20 repeats over the builtin benchmarks (the memoized fast path)…
+    for i in 0..20 {
+        let net = ["resnet32", "resnet18", "alexnet"][i % 3];
+        input.push_str(&format!("{{\"type\":\"advisor\",\"network\":\"{net}\"}}\n"));
+    }
+    // …plus 85 distinct custom topologies (each a fresh solve).
+    for i in 0..85 {
+        let req = AdvisorRequest::custom(
+            small_custom_net(256 + 16 * i),
+            PrecisionPolicy::paper().with_chunk(Some(64)),
+        );
+        input.push_str(&req.to_json().to_string());
+        input.push('\n');
+    }
+    let mut out = Vec::new();
+    let stats = serve(input.as_bytes(), &mut out).unwrap();
+    assert_eq!(stats.requests, 105);
+    assert_eq!(stats.errors, 0);
+
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 105);
+    for line in lines {
+        let report = Json::parse(line).unwrap();
+        assert_eq!(report.get("type").unwrap().as_str(), Some("advisor_report"));
+        let layers = report.get("layers").unwrap().as_arr().unwrap();
+        assert!(!layers.is_empty());
+        // Every layer carries per-GEMM m_acc predictions; FWD is never
+        // N/A for the nets in this batch past the first-layer rule.
+        let fwd = layers[0].get("gemms").unwrap().get("FWD").unwrap();
+        let m_acc = fwd.get("normal").unwrap().as_f64().unwrap();
+        assert!((1.0..=32.0).contains(&m_acc), "m_acc={m_acc}");
+        assert!(fwd.get("chunked").unwrap().as_f64().unwrap() <= m_acc);
+    }
+}
+
+#[test]
+fn serve_mixes_advisor_and_train_and_survives_errors() {
+    let mut input = String::new();
+    input.push_str("{\"type\":\"advisor\",\"network\":\"resnet32\"}\n");
+    let train = TrainRequest {
+        plan: PlanSpec::Uniform { m_acc: 10 },
+        dim: 32,
+        classes: 4,
+        hidden: 8,
+        steps: 5,
+        batch: 8,
+        n_train: 64,
+        n_test: 32,
+        ..Default::default()
+    };
+    input.push_str(&train.to_json().to_string());
+    input.push('\n');
+    input.push_str("{\"type\":\"advisor\",\"network\":\"not_a_net\"}\n");
+    let mut out = Vec::new();
+    let stats = serve(input.as_bytes(), &mut out).unwrap();
+    assert_eq!(stats.requests, 3);
+    assert_eq!(stats.errors, 1);
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(
+        Json::parse(lines[0]).unwrap().get("type").unwrap().as_str(),
+        Some("advisor_report")
+    );
+    let trained = Json::parse(lines[1]).unwrap();
+    assert_eq!(trained.get("type").unwrap().as_str(), Some("train_report"));
+    assert_eq!(trained.get("m_fwd").unwrap().as_f64(), Some(10.0));
+    assert_eq!(trained.get("steps_run").unwrap().as_f64(), Some(5.0));
+    assert!(Json::parse(lines[2]).unwrap().get("error").is_some());
+}

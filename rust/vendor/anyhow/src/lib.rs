@@ -1,0 +1,210 @@
+//! Minimal vendored stand-in for the `anyhow` crate (the build is fully
+//! offline — no crates.io registry). API-compatible with the subset this
+//! workspace uses: [`Error`], [`Result`], the [`Context`] extension trait
+//! on `Result` and `Option`, and the `anyhow!` / `bail!` / `ensure!`
+//! macros. As in real `anyhow`, plain `{}` formatting shows the outermost
+//! message and alternate `{:#}` formatting shows the whole context chain
+//! joined with `": "`.
+
+use std::fmt;
+
+/// A context-chained error. `chain[0]` is the outermost message; the last
+/// entry is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error {
+            chain: vec![msg.to_string()],
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, ctx: C) -> Error {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// The same coherence pattern real `anyhow` relies on: `Error` itself does
+// NOT implement `std::error::Error`, so this blanket impl is disjoint
+// from the std reflexive `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow`-style result alias with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading config")
+            .unwrap_err()
+            .context("loading experiment");
+        assert_eq!(format!("{e}"), "loading experiment");
+        assert_eq!(format!("{e:#}"), "loading experiment: reading config: gone");
+        assert!(format!("{e:?}").contains("Caused by:"));
+        assert_eq!(e.root_cause(), "gone");
+        assert_eq!(e.chain().count(), 3);
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e:#}"), "missing value");
+        assert_eq!(Some(7u32).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros() {
+        fn fails(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(fails(2).unwrap(), 2);
+        assert_eq!(format!("{:#}", fails(3).unwrap_err()), "three is right out");
+        assert_eq!(format!("{:#}", fails(12).unwrap_err()), "x too big: 12");
+        let e = anyhow!("code {}", 7);
+        assert_eq!(format!("{e}"), "code 7");
+    }
+
+    #[test]
+    fn question_mark_conversion() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().is_err());
+    }
+}

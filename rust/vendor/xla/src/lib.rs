@@ -1,0 +1,15 @@
+//! Placeholder for the `xla` PJRT bindings crate.
+//!
+//! The `pjrt` cargo feature needs the real `xla-rs` crate
+//! (github.com/LaurentMazare/xla-rs) plus a libxla install; the offline
+//! build cannot fetch it, so this stub exists only to turn
+//! `cargo build --features pjrt` into one actionable diagnostic instead
+//! of a page of unresolved-import errors. Replace this directory with
+//! the real crate (same path, `rust/vendor/xla`) to enable the runtime.
+
+compile_error!(
+    "the `pjrt` feature needs the real `xla` bindings crate: replace \
+     rust/vendor/xla with a vendored copy of xla-rs \
+     (github.com/LaurentMazare/xla-rs) and install libxla, then rebuild \
+     with --features pjrt"
+);
