@@ -4,10 +4,16 @@
 //! * the api solve cache: a repeated Table-1 sweep, uncached vs memoized;
 //! * softfloat quantize + sequential/chunked accumulation;
 //! * reduced-precision GEMM (the native trainer's inner loop);
-//! * a full Monte-Carlo VRR point.
+//! * a full Monte-Carlo VRR point;
+//! * telemetry overhead: the memoized sweep with recording off vs on.
 //!
 //! Run before/after each optimization; EXPERIMENTS.md §Perf records the
-//! iteration log.
+//! iteration log. Besides the human-readable table, the run writes a
+//! machine-readable `BENCH_perf.json` at the repo root: every
+//! measurement, a per-phase telemetry snapshot diff (counters and
+//! latency histograms accumulated by that phase), and the measured
+//! telemetry on/off overhead — so the perf trajectory is tracked across
+//! PRs.
 
 use std::time::Duration;
 
@@ -22,28 +28,66 @@ use abws::softfloat::format::FpFormat;
 use abws::softfloat::gemm::{rp_gemm, rp_gemm_mxu, GemmConfig};
 use abws::softfloat::quant::{quantize, Rounding};
 use abws::softfloat::tensor::Tensor;
-use abws::util::bench::{bench, header};
+use abws::telemetry;
+use abws::util::bench::{bench, header, Measurement};
+use abws::util::json::Json;
 use abws::util::rng::Pcg64;
 use abws::vrr::solver::{min_m_acc, AccumSpec};
 use abws::vrr::theorem::vrr;
 
+fn measurement_json(m: &Measurement) -> Json {
+    let mut j = Json::obj();
+    j.set("name", m.name.as_str());
+    j.set("iters", m.iters as i64);
+    j.set("median_ns", m.median.as_nanos() as u64);
+    j.set("mean_ns", m.mean.as_nanos() as u64);
+    j.set("stddev_ns", m.stddev.as_nanos() as u64);
+    j.set("min_ns", m.min.as_nanos() as u64);
+    j
+}
+
+/// Tracks per-phase telemetry deltas: every `close()` diffs the global
+/// snapshot against the previous phase boundary.
+struct Phases {
+    last: telemetry::TelemetrySnapshot,
+    out: Json,
+}
+
+impl Phases {
+    fn start() -> Phases {
+        Phases {
+            last: telemetry::snapshot(),
+            out: Json::obj(),
+        }
+    }
+
+    fn close(&mut self, name: &str) {
+        let now = telemetry::snapshot();
+        self.out.set(name, now.diff(&self.last).to_json());
+        self.last = now;
+    }
+}
+
 fn main() {
     header();
     let budget = Duration::from_millis(700);
+    let mut results: Vec<Measurement> = Vec::new();
+    let mut phases = Phases::start();
 
     // --- VRR formula -------------------------------------------------------
     for log_n in [12u32, 16, 20] {
         let n = 1usize << log_n;
-        bench(&format!("vrr(m=10, n=2^{log_n})"), budget, || {
+        results.push(bench(&format!("vrr(m=10, n=2^{log_n})"), budget, || {
             std::hint::black_box(vrr(10, 5, n))
-        });
+        }));
     }
-    bench("min_m_acc(n=2^20, plain)", budget, || {
+    results.push(bench("min_m_acc(n=2^20, plain)", budget, || {
         std::hint::black_box(min_m_acc(&AccumSpec::plain(1 << 20)))
-    });
-    bench("min_m_acc(n=2^20, chunk64)", budget, || {
+    }));
+    results.push(bench("min_m_acc(n=2^20, chunk64)", budget, || {
         std::hint::black_box(min_m_acc(&AccumSpec::plain(1 << 20).with_chunk(64)))
-    });
+    }));
+    phases.close("solver");
 
     // --- memoized solving: the repeated-query sweep ------------------------
     // A Table-1 sweep over all three networks asks `min_m_acc` for every
@@ -76,44 +120,91 @@ fn main() {
         stats.solve_entries,
         stats.hits,
     );
+    results.push(uncached);
+    results.push(memoized);
+
+    // --- telemetry overhead: memoized sweep, recording off vs on ------------
+    // Acceptance criterion: the instrumented hot path (cache hits through
+    // an instrumented SolveCache, solver counters on the rare misses)
+    // must cost < 5% over the same path with telemetry disabled.
+    let icache = SolveCache::instrumented();
+    let sweep = |c: &SolveCache| {
+        for (net, nzr) in &nets {
+            std::hint::black_box(predict_network_with(net, nzr, 5, 64, |s| c.min_m_acc(s)));
+        }
+    };
+    sweep(&icache); // warm the cache: both arms measure the hit path
+    telemetry::set_enabled(false);
+    let tel_off = bench("memoized sweep (telemetry off)", budget, || sweep(&icache));
+    telemetry::set_enabled(true);
+    let tel_on = bench("memoized sweep (telemetry on)", budget, || sweep(&icache));
+    let overhead_pct = 100.0
+        * (tel_on.median.as_secs_f64() - tel_off.median.as_secs_f64())
+        / tel_off.median.as_secs_f64().max(1e-12);
+    println!("  -> telemetry overhead on the memoized sweep: {overhead_pct:.2}%");
+    results.push(tel_off.clone());
+    results.push(tel_on.clone());
+    phases.close("cache");
 
     // --- softfloat primitives ------------------------------------------------
     let mut rng = Pcg64::seeded(1);
     let terms: Vec<f64> = (0..65_536).map(|_| rng.normal()).collect();
     let fmt = FpFormat::accumulator(10);
-    bench("quantize x 64k", budget, || {
+    results.push(bench("quantize x 64k", budget, || {
         let mut acc = 0.0;
         for &t in &terms {
             acc += quantize(t, fmt, Rounding::NearestEven);
         }
         acc
-    });
-    bench("sequential_sum 64k @ m=10", budget, || {
+    }));
+    results.push(bench("sequential_sum 64k @ m=10", budget, || {
         sequential_sum(&terms, fmt, Rounding::NearestEven)
-    });
-    bench("chunked_sum 64k @ m=10 c=64", budget, || {
+    }));
+    results.push(bench("chunked_sum 64k @ m=10 c=64", budget, || {
         chunked_sum(&terms, 64, fmt, Rounding::NearestEven)
-    });
+    }));
+    phases.close("softfloat");
 
     // --- reduced-precision GEMM ----------------------------------------------
     let a = Tensor::randn(&[16, 1024], 1.0, &mut rng);
     let b = Tensor::randn(&[1024, 16], 1.0, &mut rng);
     let cfg = GemmConfig::paper(10, None);
-    bench("rp_gemm 16x1024x16 seq", budget, || {
+    results.push(bench("rp_gemm 16x1024x16 seq", budget, || {
         std::hint::black_box(rp_gemm(&a, &b, &cfg))
-    });
+    }));
     let cfg_c = GemmConfig::paper(10, Some(64));
-    bench("rp_gemm 16x1024x16 chunk64", budget, || {
+    results.push(bench("rp_gemm 16x1024x16 chunk64", budget, || {
         std::hint::black_box(rp_gemm(&a, &b, &cfg_c))
-    });
-    bench("rp_gemm_mxu 16x1024x16 c=64", budget, || {
+    }));
+    results.push(bench("rp_gemm_mxu 16x1024x16 c=64", budget, || {
         std::hint::black_box(rp_gemm_mxu(&a, &b, &cfg_c, 64))
-    });
+    }));
+    phases.close("gemm");
 
     // --- Monte-Carlo point -----------------------------------------------------
     let mut mc = McConfig::new(16_384, 8).with_trials(32);
     mc.threads = 4;
-    bench("empirical_vrr n=16k t=32", Duration::from_secs(2), || {
+    results.push(bench("empirical_vrr n=16k t=32", Duration::from_secs(2), || {
         std::hint::black_box(empirical_vrr(&mc))
-    });
+    }));
+    phases.close("mc");
+
+    // --- machine-readable output ----------------------------------------------
+    let mut root = Json::obj();
+    root.set(
+        "benchmarks",
+        Json::Arr(results.iter().map(measurement_json).collect()),
+    );
+    root.set("phases", phases.out);
+    let mut overhead = Json::obj();
+    overhead.set("off_median_ns", tel_off.median.as_nanos() as u64);
+    overhead.set("on_median_ns", tel_on.median.as_nanos() as u64);
+    overhead.set("overhead_pct", overhead_pct);
+    root.set("telemetry_overhead", overhead);
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf.json");
+    match std::fs::write(path, format!("{root}\n")) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

@@ -112,8 +112,35 @@ impl AdvisorRequest {
         }
     }
 
+    /// Telemetry label for this request's network: a builtin key,
+    /// `"custom"`, or `"unknown"` — bounded cardinality even when fed
+    /// arbitrary (invalid) names from `serve` traffic.
+    fn telemetry_label(&self) -> &'static str {
+        match &self.network {
+            NetworkSpec::Custom(_) => "custom",
+            NetworkSpec::Builtin(name) => BUILTIN_NETWORKS
+                .iter()
+                .find(|k| **k == name.as_str())
+                .copied()
+                .unwrap_or("unknown"),
+        }
+    }
+
     /// Run the analysis through the process-wide solve cache.
     pub fn run(&self) -> Result<AdvisorReport> {
+        let _span = if crate::telemetry::enabled() {
+            let label = self.telemetry_label();
+            crate::telemetry::counter(&crate::telemetry::labeled(
+                "abws_advisor_requests_total",
+                &[("network", label)],
+            ))
+            .inc();
+            crate::telemetry::Span::enter(crate::telemetry::histogram(
+                &crate::telemetry::labeled("abws_advisor_latency_ns", &[("network", label)]),
+            ))
+        } else {
+            crate::telemetry::Span::noop()
+        };
         self.policy.validate()?;
         let (net, default_nzr) = self.network.resolve()?;
         let nzr = self.policy.nzr.clone().unwrap_or(default_nzr);

@@ -5,16 +5,28 @@
 //! `"advisor"` (the default when omitted) or `"train"`. A malformed or
 //! failing request produces an `{"error": "..."}` line *in its position*
 //! and the stream keeps going, so a batch client can zip requests to
-//! responses by line number. All solving shares the process-wide
+//! responses by line number. The output is flushed after every line, so
+//! a downstream pipe consumer sees each response as soon as it exists
+//! rather than at buffer boundaries. All solving shares the process-wide
 //! [`crate::api::cache`], so a sweep of similar requests gets the
 //! memoized fast path after the first.
+//!
+//! ## Telemetry
+//!
+//! When [`crate::telemetry`] is enabled (the default), every request
+//! records into `abws_serve_latency_ns`, bumps
+//! `abws_serve_requests_total{type=...}` (types `advisor`, `train`,
+//! `unknown`, `invalid`), counts failures in `abws_serve_errors_total`,
+//! and tracks in-flight work in the `abws_serve_queue_depth` gauge.
 
 use std::io::{BufRead, Write};
+use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use super::advisor::AdvisorRequest;
 use super::train::TrainRequest;
+use crate::telemetry::{self, labeled, Counter, Gauge, Histogram, Timer};
 use crate::util::json::Json;
 
 /// Counters for one [`serve`] session.
@@ -26,28 +38,84 @@ pub struct ServeStats {
     pub errors: usize,
 }
 
-/// Handle one request line, returning the report JSON.
-pub fn handle_request(line: &str) -> Result<Json> {
-    let j = Json::parse(line).map_err(|e| anyhow!("bad request JSON: {e}"))?;
+/// Request-type labels used by `abws_serve_requests_total{type=...}`.
+const REQUEST_TYPES: [&str; 4] = ["advisor", "train", "unknown", "invalid"];
+
+/// Handle one request line, returning the type label (for metrics) and
+/// the report JSON.
+fn handle_request_labeled(line: &str) -> (&'static str, Result<Json>) {
+    let j = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return ("invalid", Err(anyhow!("bad request JSON: {e}"))),
+    };
     if !matches!(j, Json::Obj(_)) {
-        bail!("request must be a JSON object");
+        return ("invalid", Err(anyhow!("request must be a JSON object")));
     }
     let ty = match j.get("type") {
         None => "advisor",
         Some(Json::Str(s)) => s.as_str(),
-        Some(other) => bail!("'type' must be a string, got {other}"),
+        Some(other) => {
+            return (
+                "invalid",
+                Err(anyhow!("'type' must be a string, got {other}")),
+            )
+        }
     };
     match ty {
-        "advisor" => Ok(AdvisorRequest::from_json(&j)?.run()?.to_json()),
-        "train" => Ok(TrainRequest::from_json(&j)?.resolve()?.run().to_json()),
-        other => bail!("unknown request type '{other}' (advisor|train)"),
+        "advisor" => (
+            "advisor",
+            (|| Ok(AdvisorRequest::from_json(&j)?.run()?.to_json()))(),
+        ),
+        "train" => (
+            "train",
+            (|| Ok(TrainRequest::from_json(&j)?.resolve()?.run().to_json()))(),
+        ),
+        other => (
+            "unknown",
+            Err(anyhow!("unknown request type '{other}' (advisor|train)")),
+        ),
+    }
+}
+
+/// Handle one request line, returning the report JSON.
+pub fn handle_request(line: &str) -> Result<Json> {
+    handle_request_labeled(line).1
+}
+
+/// Metric handles for one serve session, resolved once up front.
+struct ServeTelemetry {
+    latency: Arc<Histogram>,
+    errors: Arc<Counter>,
+    queue_depth: Arc<Gauge>,
+    requests: [(&'static str, Arc<Counter>); 4],
+}
+
+impl ServeTelemetry {
+    fn new() -> ServeTelemetry {
+        ServeTelemetry {
+            latency: telemetry::histogram("abws_serve_latency_ns"),
+            errors: telemetry::counter("abws_serve_errors_total"),
+            queue_depth: telemetry::gauge("abws_serve_queue_depth"),
+            requests: REQUEST_TYPES.map(|ty| {
+                let name = labeled("abws_serve_requests_total", &[("type", ty)]);
+                (ty, telemetry::counter(&name))
+            }),
+        }
+    }
+
+    fn count_request(&self, ty: &str) {
+        if let Some((_, c)) = self.requests.iter().find(|(t, _)| *t == ty) {
+            c.inc();
+        }
     }
 }
 
 /// Serve newline-delimited JSON requests from `input` to `out` until EOF.
 /// Blank lines are skipped; per-request failures become error lines, not
-/// stream failures.
+/// stream failures. Every response line (including error lines) is
+/// flushed before the next request is read.
 pub fn serve<R: BufRead, W: Write>(input: R, mut out: W) -> Result<ServeStats> {
+    let tel = telemetry::enabled().then(ServeTelemetry::new);
     let mut stats = ServeStats::default();
     for line in input.lines() {
         let line = line.context("reading request line")?;
@@ -56,7 +124,13 @@ pub fn serve<R: BufRead, W: Write>(input: R, mut out: W) -> Result<ServeStats> {
             continue;
         }
         stats.requests += 1;
-        let response = match handle_request(trimmed) {
+        if let Some(t) = &tel {
+            t.queue_depth.inc();
+        }
+        let timer = tel.as_ref().map(|_| Timer::start());
+        let (ty, result) = handle_request_labeled(trimmed);
+        let failed = result.is_err();
+        let response = match result {
             Ok(report) => report,
             Err(e) => {
                 stats.errors += 1;
@@ -65,7 +139,18 @@ pub fn serve<R: BufRead, W: Write>(input: R, mut out: W) -> Result<ServeStats> {
                 o
             }
         };
+        if let Some(t) = &tel {
+            if let Some(timer) = &timer {
+                t.latency.record(timer.elapsed_ns());
+            }
+            t.count_request(ty);
+            if failed {
+                t.errors.inc();
+            }
+            t.queue_depth.dec();
+        }
         writeln!(out, "{response}").context("writing response line")?;
+        out.flush().context("flushing response line")?;
     }
     Ok(stats)
 }
@@ -107,5 +192,48 @@ mod tests {
         let stats = serve("{\"type\":\"frobnicate\"}\n".as_bytes(), &mut out).unwrap();
         assert_eq!(stats.errors, 1);
         assert!(String::from_utf8(out).unwrap().contains("unknown request type"));
+    }
+
+    #[test]
+    fn request_type_labels_cover_dispatch() {
+        assert_eq!(handle_request_labeled("not json").0, "invalid");
+        assert_eq!(handle_request_labeled("[1,2]").0, "invalid");
+        assert_eq!(handle_request_labeled(r#"{"type":3}"#).0, "invalid");
+        assert_eq!(handle_request_labeled(r#"{"type":"nope"}"#).0, "unknown");
+        assert_eq!(
+            handle_request_labeled(r#"{"network":"resnet32"}"#).0,
+            "advisor"
+        );
+        assert_eq!(handle_request_labeled(r#"{"type":"train"}"#).0, "train");
+    }
+
+    /// Satellite requirement: each response line reaches the consumer as
+    /// soon as it is written (flush after every line).
+    #[test]
+    fn output_is_flushed_per_line() {
+        struct CountingWriter {
+            flushes: usize,
+            buf: Vec<u8>,
+        }
+        impl Write for CountingWriter {
+            fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+                self.buf.extend_from_slice(data);
+                Ok(data.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                self.flushes += 1;
+                Ok(())
+            }
+        }
+        let input = "{\"network\":\"resnet32\"}\nbad\n{\"network\":\"alexnet\"}\n";
+        let mut w = CountingWriter {
+            flushes: 0,
+            buf: Vec::new(),
+        };
+        let stats = serve(input.as_bytes(), &mut w).unwrap();
+        assert_eq!(stats.requests, 3);
+        // One flush per response line, error lines included.
+        assert!(w.flushes >= 3, "flushes={}", w.flushes);
+        assert_eq!(String::from_utf8(w.buf).unwrap().lines().count(), 3);
     }
 }

@@ -255,6 +255,12 @@ impl ResolvedTrain {
     /// [`ResolvedTrain::run`] on caller-provided train/test splits (for
     /// sweeps that share one deterministic dataset across arms).
     pub fn run_on(&self, train: &Dataset, test: &Dataset) -> TrainReport {
+        let _span = if crate::telemetry::enabled() {
+            crate::telemetry::counter("abws_train_runs_total").inc();
+            crate::telemetry::Span::enter(crate::telemetry::histogram("abws_train_run_wall_ns"))
+        } else {
+            crate::telemetry::Span::noop()
+        };
         let r = &self.req;
         let cfg = TrainConfig {
             hidden: r.hidden,

@@ -7,7 +7,8 @@
 //! abws mc [--n 16384] [--maccs 5,6,8] [--trials 256] [--chunk 64]
 //! abws train [--mode native|aot] [--macc 12 | --pp -1] [--chunk 64]
 //!            [--steps 300] [--dim 256] [--hidden 64] [--seed 42]
-//! abws serve
+//! abws serve [--telemetry]
+//! abws metrics [--format table|json|prom] [--no-demo]
 //! abws list
 //! abws info
 //! ```
@@ -39,7 +40,8 @@ pub fn run(args: Args) -> Result<()> {
         Some("area") => cmd_area(),
         Some("mc") => cmd_mc(&args),
         Some("train") => cmd_train(&args),
-        Some("serve") => cmd_serve(),
+        Some("serve") => cmd_serve(&args),
+        Some("metrics") => cmd_metrics(&args),
         Some("list") => {
             print!("{}", registry::render_catalog());
             Ok(())
@@ -53,13 +55,16 @@ pub fn run(args: Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: abws <predict|vrr|area|mc|train|serve|list|info> [options]
+const USAGE: &str = "usage: abws <predict|vrr|area|mc|train|serve|metrics|list|info> [options]
   predict  — Table 1: per-layer-group accumulation precision predictions
   vrr      — evaluate VRR / v(n) for one accumulation setup
   area     — Fig 1b: FPU area model ladder
   mc       — Monte-Carlo validation of the VRR formulas
   train    — reduced-precision training run (native bit-accurate or AOT/PJRT)
   serve    — batch mode: NDJSON advisor/train requests on stdin -> reports on stdout
+             (--telemetry prints a final JSON metrics snapshot to stderr)
+  metrics  — exercise the stack and print the telemetry snapshot
+             (--format table|json|prom; --no-demo to skip the workload)
   list     — catalog of reproducible experiments
   info     — PJRT runtime info";
 
@@ -254,7 +259,7 @@ fn report_run(m: &crate::trainer::RunMetrics, test_acc: f64, steps: usize) {
     println!("test-acc {test_acc:.4}  diverged: {}", m.diverged);
 }
 
-fn cmd_serve() -> Result<()> {
+fn cmd_serve(args: &Args) -> Result<()> {
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     let stats = api::serve(stdin.lock(), stdout.lock())?;
@@ -262,6 +267,57 @@ fn cmd_serve() -> Result<()> {
         "served {} request(s), {} error(s)",
         stats.requests, stats.errors
     );
+    // One JSON line to stderr so it never interleaves with the NDJSON
+    // report stream on stdout.
+    if args.flag("telemetry") {
+        eprintln!("{}", crate::telemetry::snapshot().to_json());
+    }
+    Ok(())
+}
+
+/// `abws metrics`: run a small representative workload through every
+/// instrumented subsystem (unless `--no-demo`), then print the snapshot.
+fn cmd_metrics(args: &Args) -> Result<()> {
+    if !args.flag("no-demo") {
+        exercise_stack()?;
+    }
+    let snap = crate::telemetry::snapshot();
+    match args.get_or("format", "table") {
+        "table" => print!("{}", snap.render()),
+        "json" => println!("{}", snap.to_json()),
+        "prom" => print!("{}", snap.prometheus()),
+        other => bail!("unknown format '{other}' (table|json|prom)"),
+    }
+    Ok(())
+}
+
+/// Touch the solver, cache, Monte-Carlo, trainer and serve front door so
+/// the demo snapshot shows every metric family.
+fn exercise_stack() -> Result<()> {
+    let policy = PrecisionPolicy::paper().with_chunk(Some(64));
+    // Two advisories: the second is the memoized fast path.
+    api::advise_builtin("resnet32", &policy)?;
+    api::advise_builtin("resnet32", &policy)?;
+    let mut mc = crate::mc::sim::McConfig::new(512, 8).with_trials(8);
+    mc.threads = 2;
+    crate::mc::sim::empirical_vrr(&mc);
+    let train = TrainRequest {
+        plan: PlanSpec::Uniform { m_acc: 10 },
+        dim: 32,
+        classes: 4,
+        hidden: 8,
+        steps: 3,
+        batch: 8,
+        n_train: 64,
+        n_test: 32,
+        ..Default::default()
+    };
+    train.resolve()?.run();
+    let mut sink = Vec::new();
+    api::serve(
+        "{\"type\":\"advisor\",\"network\":\"resnet32\"}\n".as_bytes(),
+        &mut sink,
+    )?;
     Ok(())
 }
 
@@ -306,5 +362,14 @@ mod tests {
     fn unknown_command_lists_usage() {
         let e = run(args(&["frobnicate"])).unwrap_err();
         assert!(format!("{e:#}").contains("usage:"));
+    }
+
+    #[test]
+    fn metrics_formats_render() {
+        // `--no-demo` keeps the test cheap; each format must succeed.
+        assert!(run(args(&["metrics", "--no-demo"])).is_ok());
+        assert!(run(args(&["metrics", "--no-demo", "--format", "json"])).is_ok());
+        assert!(run(args(&["metrics", "--no-demo", "--format", "prom"])).is_ok());
+        assert!(run(args(&["metrics", "--no-demo", "--format", "xml"])).is_err());
     }
 }

@@ -60,6 +60,16 @@
 //! the PJRT CPU client (cargo feature `pjrt`; without it the runtime is
 //! reduced to artifact discovery and the rest of the crate is fully
 //! self-contained).
+//!
+//! ## Observability
+//!
+//! The whole stack is instrumented through [`telemetry`], a
+//! zero-dependency metrics registry (counters, gauges, log2-bucketed
+//! latency histograms) wired through the solver, solve cache,
+//! Monte-Carlo ensembles and `abws serve`. Inspect it with the
+//! `abws metrics` subcommand, `abws serve --telemetry`, or
+//! [`telemetry::snapshot`] in code; see `docs/telemetry.md` for the
+//! metrics catalog.
 
 pub mod api;
 pub mod cli;
@@ -70,6 +80,7 @@ pub mod mc;
 pub mod nets;
 pub mod runtime;
 pub mod softfloat;
+pub mod telemetry;
 pub mod trainer;
 pub mod util;
 pub mod vrr;

@@ -11,6 +11,7 @@ use std::thread;
 use crate::softfloat::accumulate::{chunked_sum, exact_sum, sequential_sum};
 use crate::softfloat::format::FpFormat;
 use crate::softfloat::quant::{quantize, Rounding};
+use crate::telemetry::{self, Timer};
 use crate::util::rng::Pcg64;
 use crate::util::stats::Welford;
 
@@ -80,25 +81,39 @@ pub struct McResult {
 }
 
 /// Run the Monte-Carlo experiment.
+///
+/// **Deterministic in everything but `threads`, including `threads`**:
+/// each *trial* draws from its own PCG stream (stream id = trial index),
+/// workers return their trials' sample pairs in trial order, and the
+/// Welford accumulators consume them in global trial order after the
+/// join — so the result is bit-identical no matter how the trials were
+/// split across threads.
 pub fn empirical_vrr(cfg: &McConfig) -> McResult {
+    let run_timer = telemetry::enabled().then(Timer::start);
+    let worker_tput =
+        telemetry::enabled().then(|| telemetry::histogram("abws_mc_worker_trials_per_sec"));
     let acc_fmt = FpFormat::new(cfg.e_acc, cfg.m_acc);
     let prod_fmt = FpFormat::new(6, cfg.m_p);
     let threads = cfg.threads.max(1).min(cfg.trials.max(1));
     let per = cfg.trials.div_ceil(threads);
 
-    let pairs: Vec<(Welford, Welford)> = thread::scope(|scope| {
+    let chunks: Vec<Vec<(f64, f64)>> = thread::scope(|scope| {
         let mut handles = Vec::new();
         for t in 0..threads {
-            let count = per.min(cfg.trials.saturating_sub(t * per));
+            let first = t * per;
+            let count = per.min(cfg.trials.saturating_sub(first));
             if count == 0 {
                 break;
             }
+            let tput = worker_tput.clone();
             handles.push(scope.spawn(move || {
-                let mut rng = Pcg64::new(cfg.seed, t as u64 + 1);
-                let mut w_sw = Welford::new();
-                let mut w_id = Welford::new();
+                let timer = tput.is_some().then(Timer::start);
+                let mut samples = Vec::with_capacity(count);
                 let mut terms = vec![0.0f64; cfg.n];
-                for _ in 0..count {
+                for trial in first..first + count {
+                    // One PCG stream per trial: trial `i` draws the same
+                    // terms whichever worker runs it.
+                    let mut rng = Pcg64::new(cfg.seed, trial as u64 + 1);
                     for p in terms.iter_mut() {
                         *p = quantize(
                             rng.normal() * cfg.sigma_p,
@@ -110,19 +125,29 @@ pub fn empirical_vrr(cfg: &McConfig) -> McResult {
                         Some(c) => chunked_sum(&terms, c, acc_fmt, Rounding::NearestEven),
                         None => sequential_sum(&terms, acc_fmt, Rounding::NearestEven),
                     };
-                    w_sw.push(reduced);
-                    w_id.push(exact_sum(&terms));
+                    samples.push((reduced, exact_sum(&terms)));
                 }
-                (w_sw, w_id)
+                if let (Some(h), Some(timer)) = (&tput, timer) {
+                    let ns = timer.elapsed_ns().max(1);
+                    h.record((count as u64).saturating_mul(1_000_000_000) / ns);
+                }
+                samples
             }));
         }
+        // Spawn order == trial order, so concatenation restores the
+        // global trial sequence.
         handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
 
     let (mut sw, mut id) = (Welford::new(), Welford::new());
-    for (a, b) in pairs {
-        sw = sw.merge(&a);
-        id = id.merge(&b);
+    for (reduced, exact) in chunks.into_iter().flatten() {
+        sw.push(reduced);
+        id.push(exact);
+    }
+    if let Some(timer) = run_timer {
+        telemetry::counter("abws_mc_runs_total").inc();
+        telemetry::counter("abws_mc_trials_total").add(sw.count());
+        telemetry::histogram("abws_mc_run_wall_ns").record(timer.elapsed_ns());
     }
     let var_swamping = sw.variance();
     let var_ideal = id.variance();
@@ -180,6 +205,30 @@ mod tests {
         let a = empirical_vrr(&cfg);
         let b = empirical_vrr(&cfg);
         assert_eq!(a.vrr, b.vrr);
+    }
+
+    /// Satellite requirement: per-trial PCG streams make the estimate
+    /// independent of the worker split — `threads=1` and `threads=4`
+    /// must agree to the last bit (33 trials also exercises an uneven
+    /// split: 9+9+9+6).
+    #[test]
+    fn bit_identical_across_thread_counts() {
+        let base = McConfig::new(1_024, 7).with_trials(33).with_seed(42);
+        let mut results = Vec::new();
+        for threads in [1usize, 2, 4] {
+            let mut cfg = base;
+            cfg.threads = threads;
+            results.push(empirical_vrr(&cfg));
+        }
+        for r in &results[1..] {
+            assert_eq!(r.vrr.to_bits(), results[0].vrr.to_bits());
+            assert_eq!(
+                r.var_swamping.to_bits(),
+                results[0].var_swamping.to_bits()
+            );
+            assert_eq!(r.var_ideal.to_bits(), results[0].var_ideal.to_bits());
+            assert_eq!(r.trials, 33);
+        }
     }
 
     #[test]

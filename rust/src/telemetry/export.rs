@@ -1,0 +1,180 @@
+//! Prometheus text exposition (version 0.0.4) for [`TelemetrySnapshot`].
+//!
+//! Registry keys already use the series syntax `base{k="v",...}` (see
+//! [`super::registry::labeled`]); the exporter splits the base name off,
+//! emits one `# TYPE` line per base, and for histograms expands the
+//! log2 buckets into cumulative `_bucket{le="..."}` series plus `_sum`
+//! and `_count`.
+
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+
+use super::metric::bucket_upper;
+use super::snapshot::TelemetrySnapshot;
+
+/// Base metric name (before any `{labels}`) sanitized to the exposition
+/// charset `[a-zA-Z0-9_:]`.
+fn sanitize_base(name: &str) -> String {
+    name.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+/// Split a registry key into (sanitized base, label suffix incl. braces).
+fn split_series(key: &str) -> (String, &str) {
+    match key.find('{') {
+        Some(i) => (sanitize_base(&key[..i]), &key[i..]),
+        None => (sanitize_base(key), ""),
+    }
+}
+
+/// Append `le="<upper>"` to an existing label suffix (`""` or `{...}`).
+fn with_le(labels: &str, le: &str) -> String {
+    if labels.is_empty() {
+        format!("{{le=\"{le}\"}}")
+    } else {
+        // `{k="v"}` -> `{k="v",le="..."}`
+        format!("{},le=\"{le}\"}}", &labels[..labels.len() - 1])
+    }
+}
+
+impl TelemetrySnapshot {
+    /// Render the snapshot as Prometheus text exposition. Deterministic:
+    /// series are emitted in `BTreeMap` key order, so labeled series of
+    /// one base name stay adjacent under a single `# TYPE` line.
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut typed: BTreeSet<String> = BTreeSet::new();
+
+        for (key, &v) in &self.counters {
+            let (base, labels) = split_series(key);
+            if typed.insert(base.clone()) {
+                let _ = writeln!(out, "# TYPE {base} counter");
+            }
+            let _ = writeln!(out, "{base}{labels} {v}");
+        }
+        for (key, &v) in &self.gauges {
+            let (base, labels) = split_series(key);
+            if typed.insert(base.clone()) {
+                let _ = writeln!(out, "# TYPE {base} gauge");
+            }
+            let _ = writeln!(out, "{base}{labels} {v}");
+        }
+        for (key, h) in &self.histograms {
+            let (base, labels) = split_series(key);
+            if typed.insert(base.clone()) {
+                let _ = writeln!(out, "# TYPE {base} histogram");
+            }
+            let highest = h
+                .buckets
+                .iter()
+                .rposition(|&c| c > 0)
+                .map(|i| i + 1)
+                .unwrap_or(0);
+            let mut cum = 0u64;
+            for (i, &c) in h.buckets.iter().enumerate().take(highest) {
+                cum += c;
+                let le = bucket_upper(i).to_string();
+                let _ = writeln!(out, "{base}_bucket{} {cum}", with_le(labels, &le));
+            }
+            let _ = writeln!(out, "{base}_bucket{} {}", with_le(labels, "+Inf"), h.count);
+            let _ = writeln!(out, "{base}_sum{labels} {}", h.sum);
+            let _ = writeln!(out, "{base}_count{labels} {}", h.count);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::metric::Histogram;
+    use crate::telemetry::registry::labeled;
+
+    fn sample() -> TelemetrySnapshot {
+        let mut s = TelemetrySnapshot::default();
+        s.counters.insert("reqs_total".into(), 10);
+        s.counters
+            .insert(labeled("reqs_total", &[("kind", "train")]), 4);
+        s.gauges.insert("queue_depth".into(), 3);
+        let h = Histogram::new();
+        for v in [3u64, 5, 100, 2_000] {
+            h.record(v);
+        }
+        s.histograms.insert("lat_ns".into(), h.snapshot());
+        s.histograms.insert(
+            labeled("lat_ns", &[("net", "resnet32")]),
+            Histogram::new().snapshot(),
+        );
+        s
+    }
+
+    #[test]
+    fn type_line_emitted_once_per_base() {
+        let text = sample().prometheus();
+        assert_eq!(text.matches("# TYPE reqs_total counter").count(), 1);
+        assert_eq!(text.matches("# TYPE lat_ns histogram").count(), 1);
+        assert!(text.contains("# TYPE queue_depth gauge"));
+        assert!(text.contains("reqs_total 10"));
+        assert!(text.contains("reqs_total{kind=\"train\"} 4"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_capped_by_inf() {
+        let text = sample().prometheus();
+        // 3 and 5 share no octave boundary with 100 and 2000: buckets at
+        // le=4 (count 1), le=8 (2), le=128 (3), le=4096 (4), +Inf (4).
+        assert!(text.contains("lat_ns_bucket{le=\"4\"} 1"));
+        assert!(text.contains("lat_ns_bucket{le=\"8\"} 2"));
+        assert!(text.contains("lat_ns_bucket{le=\"128\"} 3"));
+        assert!(text.contains("lat_ns_bucket{le=\"4096\"} 4"));
+        assert!(text.contains("lat_ns_bucket{le=\"+Inf\"} 4"));
+        assert!(text.contains("lat_ns_sum 2108"));
+        assert!(text.contains("lat_ns_count 4"));
+        // Empty labeled series still expose +Inf/sum/count.
+        assert!(text.contains("lat_ns_bucket{net=\"resnet32\",le=\"+Inf\"} 0"));
+        assert!(text.contains("lat_ns_count{net=\"resnet32\"} 0"));
+    }
+
+    #[test]
+    fn exposition_lines_are_well_formed() {
+        // Mini-validator: every non-comment line is `name[{labels}] value`
+        // with a parseable numeric value and a sane name charset.
+        let text = sample().prometheus();
+        assert!(!text.is_empty());
+        for line in text.lines() {
+            if line.starts_with('#') {
+                assert!(line.starts_with("# TYPE "), "bad comment: {line}");
+                continue;
+            }
+            let (series, value) = line.rsplit_once(' ').expect("name value");
+            assert!(
+                value.parse::<f64>().is_ok() || value == "+Inf",
+                "bad value in: {line}"
+            );
+            let name_end = series.find('{').unwrap_or(series.len());
+            assert!(
+                series[..name_end]
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+                "bad name in: {line}"
+            );
+            if name_end < series.len() {
+                assert!(series.ends_with('}'), "unterminated labels: {line}");
+            }
+        }
+    }
+
+    #[test]
+    fn base_names_are_sanitized() {
+        let mut s = TelemetrySnapshot::default();
+        s.counters.insert("bad.name-1".into(), 1);
+        assert!(s.prometheus().contains("bad_name_1 1"));
+    }
+}

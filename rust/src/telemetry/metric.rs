@@ -1,0 +1,285 @@
+//! The three metric primitives: monotonic [`Counter`], signed [`Gauge`],
+//! and a log2-bucketed [`Histogram`] with quantile extraction.
+//!
+//! All three are a handful of relaxed atomics — safe to hammer from the
+//! solver/cache/Monte-Carlo hot paths without locks. Histograms bucket by
+//! `floor(log2(value))`, which for nanosecond latencies gives ~2x
+//! resolution across the full `u64` range in a fixed 64-slot table; the
+//! [`HistogramSnapshot::quantile`] extraction interpolates linearly
+//! inside the hit bucket, so a reported p99 is within one octave of the
+//! true value.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+
+/// Number of log2 buckets in a [`Histogram`] (covers the full `u64`
+/// value range: bucket `i` holds values in `[2^i, 2^(i+1))`, bucket 0
+/// additionally holds 0).
+pub const BUCKETS: usize = 64;
+
+/// Monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed value (queue depths, table sizes).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn dec(&self) {
+        self.add(-1);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Bucket index of a value: `floor(log2(value))`, with 0 mapping into
+/// bucket 0.
+#[inline]
+pub(crate) fn bucket_index(value: u64) -> usize {
+    if value == 0 {
+        0
+    } else {
+        63 - value.leading_zeros() as usize
+    }
+}
+
+/// Inclusive-style upper bound of bucket `i` for exposition (`le` label):
+/// every value in bucket `i` is strictly below `2^(i+1)`.
+pub(crate) fn bucket_upper(i: usize) -> u64 {
+    if i >= BUCKETS - 1 {
+        u64::MAX
+    } else {
+        1u64 << (i + 1)
+    }
+}
+
+/// Log2-bucketed histogram of `u64` values (typically nanoseconds).
+#[derive(Debug)]
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    #[inline]
+    pub fn record(&self, value: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+        self.buckets[bucket_index(value)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy of the whole distribution.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+        }
+    }
+}
+
+/// Immutable copy of a [`Histogram`]'s state — what snapshots, diffs and
+/// exporters operate on.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    /// `BUCKETS` entries; `buckets[i]` counts values in `[2^i, 2^(i+1))`.
+    pub buckets: Vec<u64>,
+}
+
+impl HistogramSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile `q ∈ [0, 1]` with linear interpolation inside the hit
+    /// bucket (accurate to within one octave). NaN on an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let before = cum;
+            cum += c;
+            if cum as f64 >= rank {
+                let lo = if i == 0 { 0.0 } else { (1u64 << i) as f64 };
+                let hi = bucket_upper(i) as f64;
+                let frac = (rank - before as f64) / c as f64;
+                return lo + frac * (hi - lo);
+            }
+        }
+        bucket_upper(BUCKETS - 1) as f64
+    }
+
+    /// Element-wise `self - baseline` (saturating) — the per-phase delta
+    /// used by bench reporting.
+    pub fn diff(&self, baseline: &HistogramSnapshot) -> HistogramSnapshot {
+        let buckets = self
+            .buckets
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| b.saturating_sub(baseline.buckets.get(i).copied().unwrap_or(0)))
+            .collect();
+        HistogramSnapshot {
+            count: self.count.saturating_sub(baseline.count),
+            sum: self.sum.saturating_sub(baseline.sum),
+            buckets,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(3);
+        g.inc();
+        g.dec();
+        g.add(-5);
+        assert_eq!(g.get(), -2);
+    }
+
+    #[test]
+    fn bucket_index_is_floor_log2() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 1);
+        assert_eq!(bucket_index(1024), 10);
+        assert_eq!(bucket_index(u64::MAX), 63);
+        assert_eq!(bucket_upper(0), 2);
+        assert_eq!(bucket_upper(10), 2048);
+        assert_eq!(bucket_upper(63), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_counts_and_mean() {
+        let h = Histogram::new();
+        for v in [100u64, 200, 400, 800] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 4);
+        assert_eq!(s.sum, 1500);
+        assert_eq!(s.mean(), 375.0);
+        // Each value landed in its own octave.
+        assert_eq!(s.buckets.iter().filter(|&&b| b > 0).count(), 4);
+    }
+
+    #[test]
+    fn quantiles_bracket_the_data() {
+        let h = Histogram::new();
+        // 99 fast ops, one slow outlier.
+        for _ in 0..99 {
+            h.record(1_000);
+        }
+        h.record(1_000_000);
+        let s = h.snapshot();
+        let p50 = s.quantile(0.5);
+        let p99 = s.quantile(0.99);
+        let p999 = s.quantile(0.999);
+        assert!((512.0..=2048.0).contains(&p50), "p50={p50}");
+        assert!((512.0..=2048.0).contains(&p99), "p99={p99}");
+        assert!(p999 > 500_000.0, "p99.9={p999}");
+        assert!(s.quantile(0.0) <= p50);
+    }
+
+    #[test]
+    fn empty_histogram_quantile_is_nan() {
+        let s = Histogram::new().snapshot();
+        assert!(s.quantile(0.5).is_nan());
+        assert!(s.mean().is_nan());
+    }
+
+    #[test]
+    fn snapshot_diff_subtracts() {
+        let h = Histogram::new();
+        h.record(10);
+        let before = h.snapshot();
+        h.record(10);
+        h.record(1 << 20);
+        let delta = h.snapshot().diff(&before);
+        assert_eq!(delta.count, 2);
+        assert_eq!(delta.sum, 10 + (1 << 20));
+        assert_eq!(delta.buckets[bucket_index(10)], 1);
+        assert_eq!(delta.buckets[20], 1);
+    }
+}

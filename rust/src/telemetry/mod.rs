@@ -1,0 +1,134 @@
+//! Zero-dependency metrics & tracing for the advisory stack.
+//!
+//! The paper's accumulation bounds are statistical claims; operating them
+//! as a service means watching the system, not just proving it once.
+//! This module is the measurement substrate: a process-wide, lock-sharded
+//! [`Registry`] of [`Counter`]s, [`Gauge`]s and log2-bucketed
+//! [`Histogram`]s, RAII [`Span`]s over `std::time::Instant`, and a
+//! [`TelemetrySnapshot`] that diffs (per-phase bench deltas) and exports
+//! as strict `util::json` or Prometheus text exposition.
+//!
+//! Design rules, in order:
+//!
+//! 1. **Hot paths pay relaxed atomics only.** Metric handles are `Arc`s
+//!    resolved once (stash them in a `OnceLock`); recording is then a
+//!    couple of `fetch_add(Relaxed)`s. Subsystems that already keep their
+//!    own atomics (the solve cache) export them through a snapshot-time
+//!    *collector* instead of double-counting on the hot path.
+//! 2. **Disabled means skipped.** [`enabled`] is a single relaxed load;
+//!    instrumented callsites branch on it and do nothing else when off.
+//!    Telemetry is on by default — the `--telemetry` CLI flags only
+//!    control *emission*.
+//! 3. **Exports are deterministic.** Snapshots use `BTreeMap`s, so JSON
+//!    and Prometheus output have stable ordering, same as the repo's
+//!    golden-file conventions.
+//!
+//! ```
+//! use abws::telemetry;
+//!
+//! let before = telemetry::snapshot();
+//! telemetry::counter("demo_requests_total").inc();
+//! let _span = telemetry::span::Span::enter(telemetry::histogram("demo_latency_ns"));
+//! drop(_span);
+//! let delta = telemetry::snapshot().diff(&before);
+//! assert_eq!(delta.counters["demo_requests_total"], 1);
+//! ```
+//!
+//! The full metrics catalog is documented in `docs/telemetry.md`.
+
+pub mod export;
+pub mod metric;
+pub mod registry;
+pub mod snapshot;
+pub mod span;
+
+pub use metric::{Counter, Gauge, Histogram, HistogramSnapshot};
+pub use registry::{labeled, Collector, Registry};
+pub use snapshot::TelemetrySnapshot;
+pub use span::{time, Span, Timer};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, OnceLock};
+
+/// Global recording switch. Default **on**: recording costs relaxed
+/// atomics, and the serve/CLI `--telemetry` flags gate emission, not
+/// collection. Benches flip this off to measure instrumentation overhead.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Is telemetry recording enabled? One relaxed load — cheap enough to
+/// check on any hot path.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn recording on or off process-wide.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// The process-wide registry all instrumented subsystems report into.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Get or register a counter in the global registry.
+pub fn counter(name: &str) -> Arc<Counter> {
+    global().counter(name)
+}
+
+/// Get or register a gauge in the global registry.
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    global().gauge(name)
+}
+
+/// Get or register a histogram in the global registry.
+pub fn histogram(name: &str) -> Arc<Histogram> {
+    global().histogram(name)
+}
+
+/// Register a snapshot-time collector with the global registry.
+pub fn register_collector(c: Collector) {
+    global().register_collector(c);
+}
+
+/// Snapshot the global registry (registered metrics + collectors).
+pub fn snapshot() -> TelemetrySnapshot {
+    global().snapshot()
+}
+
+/// `ENABLED` is process-global; unit tests that flip it (or assert on
+/// behaviour that depends on it) serialize on this lock so the parallel
+/// test runner can't interleave them.
+#[cfg(test)]
+pub(crate) static TEST_ENABLED_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_registry_round_trips() {
+        counter("telemetry_mod_test_total").add(3);
+        gauge("telemetry_mod_test_gauge").set(9);
+        histogram("telemetry_mod_test_ns").record(128);
+        let s = snapshot();
+        assert!(s.counters["telemetry_mod_test_total"] >= 3);
+        assert_eq!(s.gauges["telemetry_mod_test_gauge"], 9);
+        assert!(s.histograms["telemetry_mod_test_ns"].count >= 1);
+    }
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        let _guard = TEST_ENABLED_LOCK.lock().unwrap();
+        set_enabled(false);
+        let h = histogram("telemetry_mod_disabled_ns");
+        let n0 = h.count();
+        drop(Span::enter(h.clone()));
+        let n1 = h.count();
+        set_enabled(true);
+        assert!(enabled());
+        assert_eq!(n0, n1);
+    }
+}

@@ -1,0 +1,242 @@
+//! Lock-sharded metrics registry: names in, shared metric handles out.
+//!
+//! Metric handles are `Arc`s — callsites that care about hot-path cost
+//! resolve a handle once (e.g. in a `OnceLock`) and then touch only
+//! relaxed atomics; callsites on request granularity just look up by
+//! name each time (one short shard-lock + hash lookup). Subsystems that
+//! already keep their own atomic counters (like the solve cache) can
+//! register a *collector* instead, which contributes values at snapshot
+//! time with zero hot-path cost.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::metric::{Counter, Gauge, Histogram};
+use super::snapshot::TelemetrySnapshot;
+
+/// Number of independent shards (keyed by a hash of the metric name), so
+/// concurrent registrations/lookups of unrelated metrics don't contend.
+const SHARD_COUNT: usize = 8;
+
+/// A snapshot-time contributor for subsystems with pre-existing atomics.
+pub type Collector = Arc<dyn Fn(&mut TelemetrySnapshot) + Send + Sync>;
+
+#[derive(Default)]
+struct Shard {
+    counters: Mutex<HashMap<String, Arc<Counter>>>,
+    gauges: Mutex<HashMap<String, Arc<Gauge>>>,
+    histograms: Mutex<HashMap<String, Arc<Histogram>>>,
+}
+
+/// The registry: get-or-create metric handles by name, snapshot the
+/// whole catalog.
+pub struct Registry {
+    shards: [Shard; SHARD_COUNT],
+    collectors: Mutex<Vec<Collector>>,
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry {
+            shards: std::array::from_fn(|_| Shard::default()),
+            collectors: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+/// FNV-1a — tiny, good enough to spread names over 8 shards.
+fn shard_index(name: &str) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    (h as usize) % SHARD_COUNT
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn shard(&self, name: &str) -> &Shard {
+        &self.shards[shard_index(name)]
+    }
+
+    /// Get or register the counter `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = self.shard(name).counters.lock().unwrap();
+        match map.get(name) {
+            Some(c) => c.clone(),
+            None => {
+                let c = Arc::new(Counter::new());
+                map.insert(name.to_string(), c.clone());
+                c
+            }
+        }
+    }
+
+    /// Get or register the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut map = self.shard(name).gauges.lock().unwrap();
+        match map.get(name) {
+            Some(g) => g.clone(),
+            None => {
+                let g = Arc::new(Gauge::new());
+                map.insert(name.to_string(), g.clone());
+                g
+            }
+        }
+    }
+
+    /// Get or register the histogram `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut map = self.shard(name).histograms.lock().unwrap();
+        match map.get(name) {
+            Some(h) => h.clone(),
+            None => {
+                let h = Arc::new(Histogram::new());
+                map.insert(name.to_string(), h.clone());
+                h
+            }
+        }
+    }
+
+    /// Register a snapshot-time collector. Collectors run *after* the
+    /// registered metrics are copied, outside any registry lock, so they
+    /// may freely call back into the registry (or into lazily-initialized
+    /// globals) without deadlocking.
+    pub fn register_collector(&self, c: Collector) {
+        self.collectors.lock().unwrap().push(c);
+    }
+
+    /// Point-in-time copy of every registered metric plus collector
+    /// contributions.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        let mut snap = TelemetrySnapshot::default();
+        for shard in &self.shards {
+            for (name, c) in shard.counters.lock().unwrap().iter() {
+                snap.counters.insert(name.clone(), c.get());
+            }
+            for (name, g) in shard.gauges.lock().unwrap().iter() {
+                snap.gauges.insert(name.clone(), g.get());
+            }
+            for (name, h) in shard.histograms.lock().unwrap().iter() {
+                snap.histograms.insert(name.clone(), h.snapshot());
+            }
+        }
+        // Clone the collector list first so none of the registry locks
+        // are held while user code runs.
+        let collectors: Vec<Collector> = self.collectors.lock().unwrap().clone();
+        for c in &collectors {
+            c(&mut snap);
+        }
+        snap
+    }
+}
+
+/// Build a labeled metric name, `base{k="v",...}` — the exposition-format
+/// series syntax, understood by the Prometheus exporter. Label values are
+/// escaped per the exposition rules.
+pub fn labeled(base: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return base.to_string();
+    }
+    let mut s = String::with_capacity(base.len() + 16 * labels.len());
+    s.push_str(base);
+    s.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(k);
+        s.push_str("=\"");
+        for ch in v.chars() {
+            match ch {
+                '\\' => s.push_str("\\\\"),
+                '"' => s.push_str("\\\""),
+                '\n' => s.push_str("\\n"),
+                c => s.push(c),
+            }
+        }
+        s.push('"');
+    }
+    s.push('}');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_name_same_handle() {
+        let r = Registry::new();
+        let a = r.counter("x_total");
+        let b = r.counter("x_total");
+        a.inc();
+        b.add(2);
+        assert_eq!(r.counter("x_total").get(), 3);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn kinds_do_not_collide() {
+        let r = Registry::new();
+        r.counter("m").inc();
+        r.gauge("m").set(-7);
+        r.histogram("m").record(5);
+        let s = r.snapshot();
+        assert_eq!(s.counters.get("m"), Some(&1));
+        assert_eq!(s.gauges.get("m"), Some(&-7));
+        assert_eq!(s.histograms.get("m").unwrap().count, 1);
+    }
+
+    #[test]
+    fn snapshot_covers_all_shards() {
+        let r = Registry::new();
+        for i in 0..64 {
+            r.counter(&format!("metric_{i}_total")).add(i);
+        }
+        let s = r.snapshot();
+        assert_eq!(s.counters.len(), 64);
+        assert_eq!(s.counters["metric_63_total"], 63);
+    }
+
+    #[test]
+    fn collectors_contribute_at_snapshot_time() {
+        let r = Registry::new();
+        r.register_collector(Arc::new(|snap| {
+            snap.counters.insert("derived_total".into(), 42);
+        }));
+        assert_eq!(r.snapshot().counters.get("derived_total"), Some(&42));
+    }
+
+    #[test]
+    fn labeled_builds_series_names() {
+        assert_eq!(labeled("x_total", &[]), "x_total");
+        assert_eq!(
+            labeled("x_total", &[("net", "resnet32"), ("gemm", "FWD")]),
+            "x_total{net=\"resnet32\",gemm=\"FWD\"}"
+        );
+        assert_eq!(labeled("x", &[("k", "a\"b")]), "x{k=\"a\\\"b\"}");
+    }
+
+    #[test]
+    fn concurrent_registration_is_safe() {
+        let r = Registry::new();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for i in 0..100 {
+                        r.counter(&format!("c{}_total", i % 10)).inc();
+                    }
+                });
+            }
+        });
+        let s = r.snapshot();
+        let total: u64 = s.counters.values().sum();
+        assert_eq!(total, 400);
+        assert_eq!(s.counters.len(), 10);
+    }
+}

@@ -1,0 +1,219 @@
+//! [`TelemetrySnapshot`]: a point-in-time copy of the whole metrics
+//! catalog, with diffing (for per-phase bench deltas), JSON export and a
+//! human-readable table rendering.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::metric::{bucket_upper, HistogramSnapshot};
+
+/// Everything the registry knew at one instant. `BTreeMap`s keep every
+/// export deterministic (stable name order), matching the repo's
+/// golden-file conventions.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TelemetrySnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+}
+
+impl TelemetrySnapshot {
+    /// `self - baseline`: counters and histograms subtract (saturating);
+    /// gauges are instantaneous so the later value is kept as-is.
+    /// Metrics absent from the baseline pass through unchanged — this is
+    /// the "what did this phase do" primitive benches report with.
+    pub fn diff(&self, baseline: &TelemetrySnapshot) -> TelemetrySnapshot {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, &v)| {
+                let base = baseline.counters.get(k).copied().unwrap_or(0);
+                (k.clone(), v.saturating_sub(base))
+            })
+            .collect();
+        let histograms = self
+            .histograms
+            .iter()
+            .map(|(k, h)| {
+                let delta = match baseline.histograms.get(k) {
+                    Some(base) => h.diff(base),
+                    None => h.clone(),
+                };
+                (k.clone(), delta)
+            })
+            .collect();
+        TelemetrySnapshot {
+            counters,
+            gauges: self.gauges.clone(),
+            histograms,
+        }
+    }
+
+    /// Strict `util::json` export. Histograms carry summary statistics
+    /// (count/sum/mean/p50/p95/p99) plus the raw non-empty buckets as
+    /// `[upper_bound, count]` pairs.
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (name, &v) in &self.counters {
+            counters.set(name, v);
+        }
+        let mut gauges = Json::obj();
+        for (name, &v) in &self.gauges {
+            gauges.set(name, v);
+        }
+        let mut histograms = Json::obj();
+        for (name, h) in &self.histograms {
+            let mut entry = Json::obj();
+            entry
+                .set("count", h.count)
+                .set("sum", h.sum)
+                .set("mean", h.mean())
+                .set("p50", h.quantile(0.50))
+                .set("p95", h.quantile(0.95))
+                .set("p99", h.quantile(0.99));
+            let buckets: Vec<Json> = h
+                .buckets
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c > 0)
+                .map(|(i, &c)| Json::Arr(vec![Json::from(bucket_upper(i)), Json::from(c)]))
+                .collect();
+            entry.set("buckets", buckets);
+            histograms.set(name, entry);
+        }
+        let mut root = Json::obj();
+        root.set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", histograms);
+        root
+    }
+
+    /// Human-readable table for `abws metrics`.
+    pub fn render(&self) -> String {
+        fn fmt_ns(ns: f64) -> String {
+            if ns.is_nan() {
+                "-".to_string()
+            } else if ns >= 1e9 {
+                format!("{:.2}s", ns / 1e9)
+            } else if ns >= 1e6 {
+                format!("{:.2}ms", ns / 1e6)
+            } else if ns >= 1e3 {
+                format!("{:.2}us", ns / 1e3)
+            } else {
+                format!("{ns:.0}ns")
+            }
+        }
+        let mut out = String::new();
+        if !self.counters.is_empty() {
+            out.push_str("counters:\n");
+            let width = self.counters.keys().map(|k| k.len()).max().unwrap_or(0);
+            for (name, v) in &self.counters {
+                out.push_str(&format!("  {name:<width$}  {v}\n"));
+            }
+        }
+        if !self.gauges.is_empty() {
+            out.push_str("gauges:\n");
+            let width = self.gauges.keys().map(|k| k.len()).max().unwrap_or(0);
+            for (name, v) in &self.gauges {
+                out.push_str(&format!("  {name:<width$}  {v}\n"));
+            }
+        }
+        if !self.histograms.is_empty() {
+            out.push_str("histograms:\n");
+            let width = self.histograms.keys().map(|k| k.len()).max().unwrap_or(0);
+            for (name, h) in &self.histograms {
+                // `_ns`-suffixed histograms hold nanoseconds — humanize.
+                let time_like = name.contains("_ns");
+                let fmt = |x: f64| {
+                    if time_like {
+                        fmt_ns(x)
+                    } else if x.is_nan() {
+                        "-".to_string()
+                    } else {
+                        format!("{x:.1}")
+                    }
+                };
+                out.push_str(&format!(
+                    "  {name:<width$}  count={} mean={} p50={} p95={} p99={}\n",
+                    h.count,
+                    fmt(h.mean()),
+                    fmt(h.quantile(0.50)),
+                    fmt(h.quantile(0.95)),
+                    fmt(h.quantile(0.99)),
+                ));
+            }
+        }
+        if out.is_empty() {
+            out.push_str("(no metrics recorded)\n");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::metric::Histogram;
+
+    fn sample() -> TelemetrySnapshot {
+        let h = Histogram::new();
+        for v in [100u64, 200, 400] {
+            h.record(v);
+        }
+        let mut s = TelemetrySnapshot::default();
+        s.counters.insert("reqs_total".into(), 10);
+        s.gauges.insert("depth".into(), -2);
+        s.histograms.insert("lat_ns".into(), h.snapshot());
+        s
+    }
+
+    #[test]
+    fn json_export_has_quantiles_and_buckets() {
+        let j = sample().to_json();
+        assert_eq!(
+            j.get("counters").unwrap().get("reqs_total").unwrap().as_f64(),
+            Some(10.0)
+        );
+        assert_eq!(
+            j.get("gauges").unwrap().get("depth").unwrap().as_f64(),
+            Some(-2.0)
+        );
+        let h = j.get("histograms").unwrap().get("lat_ns").unwrap();
+        assert_eq!(h.get("count").unwrap().as_f64(), Some(3.0));
+        assert_eq!(h.get("sum").unwrap().as_f64(), Some(700.0));
+        assert!(h.get("p50").unwrap().as_f64().unwrap() > 0.0);
+        assert!(h.get("p99").unwrap().as_f64().is_some());
+        assert_eq!(h.get("buckets").unwrap().as_arr().unwrap().len(), 3);
+        // The export is valid JSON text.
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn diff_subtracts_counters_and_histograms() {
+        let before = sample();
+        let mut after = before.clone();
+        *after.counters.get_mut("reqs_total").unwrap() = 25;
+        after.counters.insert("new_total".into(), 7);
+        let h = Histogram::new();
+        for v in [100u64, 200, 400, 800, 1600] {
+            h.record(v);
+        }
+        *after.histograms.get_mut("lat_ns").unwrap() = h.snapshot();
+        let d = after.diff(&before);
+        assert_eq!(d.counters["reqs_total"], 15);
+        assert_eq!(d.counters["new_total"], 7);
+        assert_eq!(d.histograms["lat_ns"].count, 2);
+        assert_eq!(d.gauges["depth"], -2);
+    }
+
+    #[test]
+    fn render_mentions_each_metric() {
+        let text = sample().render();
+        assert!(text.contains("reqs_total"));
+        assert!(text.contains("depth"));
+        assert!(text.contains("lat_ns"));
+        assert!(text.contains("p95"));
+        assert!(TelemetrySnapshot::default().render().contains("no metrics"));
+    }
+}

@@ -168,10 +168,22 @@ impl NativeTrainer {
     /// Full training loop over a dataset; returns the metrics trace.
     /// Stops early on divergence (loss NaN/∞ or explosion).
     pub fn train(&mut self, data: &Dataset) -> RunMetrics {
+        // Resolve the step metrics once per run, not per step.
+        let tel = crate::telemetry::enabled().then(|| {
+            (
+                crate::telemetry::counter("abws_train_steps_total"),
+                crate::telemetry::histogram("abws_train_step_ns"),
+            )
+        });
         let mut metrics = RunMetrics::default();
         for step in 0..self.cfg.steps {
             let (xb, yb) = data.batch(step, self.cfg.batch);
+            let timer = tel.as_ref().map(|_| crate::telemetry::Timer::start());
             let (loss, acc) = self.step(&xb, &yb);
+            if let (Some((steps, step_ns)), Some(timer)) = (&tel, timer) {
+                steps.inc();
+                step_ns.record(timer.elapsed_ns());
+            }
             if step % self.cfg.log_every == 0 {
                 metrics.push(StepRecord {
                     step,

@@ -103,6 +103,11 @@ impl From<usize> for Json {
         Json::Num(x as f64)
     }
 }
+impl From<u64> for Json {
+    fn from(x: u64) -> Json {
+        Json::Num(x as f64)
+    }
+}
 impl From<i64> for Json {
     fn from(x: i64) -> Json {
         Json::Num(x as f64)

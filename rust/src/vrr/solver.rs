@@ -4,8 +4,11 @@
 //! under the paper's cut-off. Table 1 is this solver applied to every
 //! (layer, GEMM) of the three benchmark networks.
 
+use std::sync::{Arc, OnceLock};
+
 use super::sparsity::{vrr_chunked_sparse_total, vrr_sparse};
 use super::variance_lost::is_suitable;
+use crate::telemetry::{self, Counter, Histogram, Timer};
 
 /// Description of one accumulation (one GEMM's inner dimension).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -100,23 +103,62 @@ impl AccumSpec {
 /// mantissa bits; 32 leaves margin for ablations.
 pub const M_ACC_MAX: u32 = 32;
 
+/// Solver metric handles (`abws_solver_*`), resolved once.
+struct SolverTelemetry {
+    solves: Arc<Counter>,
+    checks: Arc<Counter>,
+    wall: Arc<Histogram>,
+}
+
+fn solver_telemetry() -> &'static SolverTelemetry {
+    static TEL: OnceLock<SolverTelemetry> = OnceLock::new();
+    TEL.get_or_init(|| SolverTelemetry {
+        solves: telemetry::counter("abws_solver_solves_total"),
+        checks: telemetry::counter("abws_solver_suitability_checks_total"),
+        wall: telemetry::histogram("abws_solver_wall_ns"),
+    })
+}
+
 /// Minimum `m_acc` such that the accumulation is suitable.
 ///
 /// Exploits monotonicity of suitability in `m_acc` with a binary search
 /// over `[1, M_ACC_MAX]`; returns `M_ACC_MAX` if nothing smaller works.
+///
+/// Each uncached solve counts into `abws_solver_solves_total` /
+/// `abws_solver_suitability_checks_total` and records wall time into
+/// `abws_solver_wall_ns` (skipped entirely when telemetry is disabled —
+/// every suitability check is O(n), so one `Instant` per solve is noise).
 pub fn min_m_acc(spec: &AccumSpec) -> u32 {
+    let mut checks = 0u64;
+    if !telemetry::enabled() {
+        return min_m_acc_counted(spec, &mut checks);
+    }
+    let timer = Timer::start();
+    let m = min_m_acc_counted(spec, &mut checks);
+    let tel = solver_telemetry();
+    tel.solves.inc();
+    tel.checks.add(checks);
+    tel.wall.record(timer.elapsed_ns());
+    m
+}
+
+fn min_m_acc_counted(spec: &AccumSpec, checks: &mut u64) -> u32 {
+    let mut check = |m: u32| {
+        *checks += 1;
+        spec.suitable(m)
+    };
     // Binary search for the first suitable width.
     let (mut lo, mut hi) = (1u32, M_ACC_MAX);
-    if spec.suitable(lo) {
+    if check(lo) {
         return lo;
     }
-    if !spec.suitable(hi) {
+    if !check(hi) {
         return M_ACC_MAX;
     }
     // Invariant: !suitable(lo) && suitable(hi).
     while hi - lo > 1 {
         let mid = (lo + hi) / 2;
-        if spec.suitable(mid) {
+        if check(mid) {
             hi = mid;
         } else {
             lo = mid;
@@ -221,6 +263,16 @@ mod tests {
         assert_eq!(perturbed(10, -2), 8);
         assert_eq!(perturbed(1, -3), 1); // floored
         assert_eq!(perturbed(10, 2), 12);
+    }
+
+    #[test]
+    fn solver_counts_suitability_checks() {
+        let spec = AccumSpec::plain(1 << 15);
+        let mut checks = 0u64;
+        let m = min_m_acc_counted(&spec, &mut checks);
+        assert_eq!(m, min_m_acc(&spec));
+        // 2 endpoint probes + ≤ ⌈log₂(M_ACC_MAX − 1)⌉ bisection steps.
+        assert!((2..=7).contains(&checks), "checks={checks}");
     }
 
     #[test]

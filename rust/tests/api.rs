@@ -3,7 +3,7 @@
 //! types must round-trip through JSON, and the `serve` front-end must
 //! answer batches.
 
-use abws::api::cache::SolveCache;
+use abws::api::cache::{SolveCache, MAX_ENTRIES};
 use abws::api::{serve, AdvisorReport, AdvisorRequest, PlanSpec, PrecisionPolicy, TrainRequest};
 use abws::nets::layer::{Layer, Network};
 use abws::util::json::Json;
@@ -48,6 +48,68 @@ fn cached_solves_are_bit_identical_across_grid() {
     // One hit per repeated solve + three per repeated vrr query.
     assert_eq!(stats.misses, (grid + grid * 3) as u64);
     assert_eq!(stats.hits, (grid + grid * 3) as u64);
+}
+
+/// Satellite requirement: hammer one `SolveCache` from parallel workers.
+/// Every query must return the direct-solve value, the hit+miss counters
+/// must reconcile exactly with the number of requests issued, and the
+/// tables must stay within the capacity bound.
+#[test]
+fn cache_survives_concurrent_hammering() {
+    const WORKERS: usize = 8;
+    const OPS: usize = 400;
+    // A small key set so workers collide on both the hit and miss paths.
+    let mut specs = Vec::new();
+    for n in [64usize, 256, 1_000, 4_096] {
+        for m_p in [2u32, 5] {
+            for chunk in [None, Some(64)] {
+                specs.push(AccumSpec {
+                    n,
+                    m_p,
+                    nzr: 0.5,
+                    chunk,
+                });
+            }
+        }
+    }
+
+    let cache = SolveCache::new();
+    std::thread::scope(|s| {
+        for w in 0..WORKERS {
+            let cache = &cache;
+            let specs = &specs;
+            s.spawn(move || {
+                for i in 0..OPS {
+                    // Stagger per worker so threads disagree about which
+                    // keys are warm.
+                    let spec = &specs[(w * 7 + i) % specs.len()];
+                    assert_eq!(cache.min_m_acc(spec), min_m_acc(spec), "{spec:?}");
+                    if i % 3 == 0 {
+                        let want = spec.vrr(8).to_bits();
+                        assert_eq!(cache.vrr(spec, 8).to_bits(), want, "{spec:?}");
+                    }
+                }
+            });
+        }
+    });
+
+    let stats = cache.stats();
+    // Each query increments exactly one of hits/misses — even when two
+    // threads race a miss on the same key, both count as misses.
+    let vrr_ops_per_worker = OPS.div_ceil(3);
+    let total = (WORKERS * (OPS + vrr_ops_per_worker)) as u64;
+    assert_eq!(stats.hits + stats.misses, total);
+    // At least one miss per distinct key actually queried; far more hits
+    // than misses on this small key set.
+    assert!(stats.misses >= specs.len() as u64);
+    assert!(stats.hits > stats.misses);
+    // Capacity bound: entries never exceed the distinct key count, let
+    // alone the flush threshold.
+    assert!(stats.solve_entries <= specs.len());
+    assert!(stats.vrr_entries <= specs.len());
+    assert!(stats.solve_entries <= MAX_ENTRIES);
+    assert!(stats.vrr_entries <= MAX_ENTRIES);
+    assert_eq!(stats.evictions, 0);
 }
 
 fn small_custom_net(fc_in: usize) -> Network {

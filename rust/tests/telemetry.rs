@@ -1,0 +1,177 @@
+//! Integration tests for the `abws::telemetry` subsystem as wired
+//! through the serve front-end and the process-wide solve cache.
+//!
+//! These run in their own test binary (own process, own global
+//! registry), but the tests within it still share that registry across
+//! threads — so assertions on metrics other tests may touch use `>=` or
+//! before/after deltas, never exact global equality. Uniquely-named
+//! probe metrics get exact assertions.
+
+use abws::api::serve;
+use abws::telemetry;
+use abws::util::json::Json;
+
+/// Build an NDJSON batch: `advisors` builtin advisor requests cycling
+/// the three benchmark networks, plus `bad` malformed lines and
+/// `unknown` unknown-type lines.
+fn batch(advisors: usize, bad: usize, unknown: usize) -> String {
+    let mut input = String::new();
+    for i in 0..advisors {
+        let net = ["resnet32", "resnet18", "alexnet"][i % 3];
+        input.push_str(&format!("{{\"type\":\"advisor\",\"network\":\"{net}\"}}\n"));
+    }
+    for _ in 0..bad {
+        input.push_str("this is not json\n");
+    }
+    for _ in 0..unknown {
+        input.push_str("{\"type\":\"frobnicate\"}\n");
+    }
+    input
+}
+
+/// Acceptance criterion: a 1000-request batch through `serve` emits a
+/// JSON telemetry snapshot containing latency p50/p95/p99, per-type
+/// request counts, and the SolveCache hit counters.
+#[test]
+fn serve_batch_of_1000_emits_full_telemetry() {
+    let before = telemetry::snapshot();
+    let input = batch(990, 6, 4);
+
+    let mut out = Vec::new();
+    let stats = serve(input.as_bytes(), &mut out).unwrap();
+    assert_eq!(stats.requests, 1000);
+    assert_eq!(stats.errors, 10);
+    assert_eq!(String::from_utf8(out).unwrap().lines().count(), 1000);
+
+    let delta = telemetry::snapshot().diff(&before);
+
+    // Per-type request counts (>=: other tests in this binary may also
+    // drive serve concurrently, only adding to the deltas).
+    let c = |name: &str| delta.counters.get(name).copied().unwrap_or(0);
+    assert!(c("abws_serve_requests_total{type=\"advisor\"}") >= 990);
+    assert!(c("abws_serve_requests_total{type=\"invalid\"}") >= 6);
+    assert!(c("abws_serve_requests_total{type=\"unknown\"}") >= 4);
+    assert!(c("abws_serve_errors_total") >= 10);
+
+    // Latency histogram with sane quantiles.
+    let lat = &delta.histograms["abws_serve_latency_ns"];
+    assert!(lat.count >= 1000, "latency count {}", lat.count);
+    let (p50, p95, p99) = (lat.quantile(0.5), lat.quantile(0.95), lat.quantile(0.99));
+    assert!(p50 > 0.0, "p50={p50}");
+    assert!(p50 <= p95 && p95 <= p99, "p50={p50} p95={p95} p99={p99}");
+
+    // The repeated builtin sweeps ride the memoized global SolveCache:
+    // its collector-exported hit counter must have moved.
+    assert!(c("abws_cache_hits_total") >= 1, "no cache hits recorded");
+    assert!(
+        delta.counters.contains_key("abws_cache_misses_total"),
+        "cache collector missing from snapshot"
+    );
+
+    // And the snapshot serializes with the quantiles in place.
+    let j = delta.to_json();
+    let lat_json = j.get("histograms").unwrap().get("abws_serve_latency_ns").unwrap();
+    for key in ["count", "p50", "p95", "p99", "buckets"] {
+        assert!(lat_json.get(key).is_some(), "missing histogram key {key}");
+    }
+    // The emitted snapshot is itself valid JSON text.
+    let reparsed = Json::parse(&j.to_string()).unwrap();
+    assert!(reparsed.get("counters").is_some());
+}
+
+/// Acceptance criterion: the Prometheus export parses as text
+/// exposition — every non-comment line is `name{labels} value` with a
+/// numeric value and a legal metric name; histograms expose cumulative
+/// buckets ending at `+Inf` plus `_sum`/`_count`.
+#[test]
+fn prometheus_export_is_valid_exposition() {
+    // Drive a little traffic so the export is non-trivial.
+    let mut out = Vec::new();
+    serve(batch(12, 1, 1).as_bytes(), &mut out).unwrap();
+
+    let text = telemetry::snapshot().prometheus();
+    assert!(!text.is_empty());
+
+    let name_ok = |name: &str| {
+        !name.is_empty()
+            && name
+                .chars()
+                .all(|ch| ch.is_ascii_alphanumeric() || ch == '_' || ch == ':')
+            && !name.starts_with(|ch: char| ch.is_ascii_digit())
+    };
+
+    let mut samples = 0usize;
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.split_whitespace();
+            let name = parts.next().unwrap_or("");
+            let kind = parts.next().unwrap_or("");
+            assert!(name_ok(name), "bad TYPE name in {line:?}");
+            assert!(
+                matches!(kind, "counter" | "gauge" | "histogram"),
+                "bad TYPE kind in {line:?}"
+            );
+            continue;
+        }
+        assert!(!line.starts_with('#'), "unexpected comment {line:?}");
+        let (series, value) = line.rsplit_once(' ').expect("sample without value");
+        value.parse::<f64>().unwrap_or_else(|_| panic!("bad value in {line:?}"));
+        let name = series.split('{').next().unwrap();
+        assert!(name_ok(name), "bad metric name in {line:?}");
+        if series.contains('{') {
+            assert!(series.ends_with('}'), "unbalanced labels in {line:?}");
+        }
+        samples += 1;
+    }
+    assert!(samples > 0, "no samples in exposition");
+
+    // Histogram expansion for the serve latency series.
+    assert!(text.contains("# TYPE abws_serve_latency_ns histogram"));
+    assert!(text.contains("abws_serve_latency_ns_bucket{le=\"+Inf\"}"));
+    assert!(text.contains("abws_serve_latency_ns_sum"));
+    assert!(text.contains("abws_serve_latency_ns_count"));
+    // Cumulative bucket counts are non-decreasing, with +Inf == _count.
+    let buckets: Vec<f64> = text
+        .lines()
+        .filter(|l| l.starts_with("abws_serve_latency_ns_bucket"))
+        .map(|l| l.rsplit_once(' ').unwrap().1.parse::<f64>().unwrap())
+        .collect();
+    assert!(buckets.len() >= 2, "expected several buckets");
+    assert!(
+        buckets.windows(2).all(|w| w[0] <= w[1]),
+        "buckets not cumulative: {buckets:?}"
+    );
+
+    // Per-type serve counters survive the label round-trip.
+    assert!(text.contains("abws_serve_requests_total{type=\"advisor\"}"));
+}
+
+/// Snapshot diffing isolates activity between two points in time: a
+/// uniquely-named probe metric shows exactly what this test did, even
+/// with unrelated tests hammering the same registry.
+#[test]
+fn snapshot_diff_isolates_probe_activity() {
+    let probe_c = telemetry::counter("itest_diff_probe_total");
+    let probe_h = telemetry::histogram("itest_diff_probe_ns");
+    probe_c.inc(); // pre-baseline noise the diff must subtract away
+
+    let before = telemetry::snapshot();
+    probe_c.add(3);
+    probe_h.record(100);
+    probe_h.record(200_000);
+    let delta = telemetry::snapshot().diff(&before);
+
+    assert_eq!(delta.counters["itest_diff_probe_total"], 3);
+    let h = &delta.histograms["itest_diff_probe_ns"];
+    assert_eq!(h.count, 2);
+    assert_eq!(h.sum, 200_100);
+    assert!(h.quantile(0.5) > 0.0);
+
+    // A brand-new metric (absent from the baseline) passes through.
+    telemetry::counter("itest_diff_probe_fresh_total").inc();
+    let delta2 = telemetry::snapshot().diff(&before);
+    assert_eq!(delta2.counters["itest_diff_probe_fresh_total"], 1);
+}
