@@ -84,14 +84,15 @@ fn main() -> Result<()> {
         layers,
         first_layer: 0,
     };
-    let policy = PrecisionPolicy::paper()
-        .with_m_p(args.get_u32("mp", 5))
-        .with_chunk(Some(args.get_usize("chunk", 64)))
-        .with_nzr(NzrModel::uniform(
+    let policy = PrecisionPolicy::builder()
+        .m_p(args.get_u32("mp", 5))
+        .chunk(args.get_usize("chunk", 64))
+        .nzr(NzrModel::uniform(
             args.get_f64("nzr-fwd", 1.0),
             args.get_f64("nzr-bwd", 0.5),
             args.get_f64("nzr-grad", 0.5),
-        ));
+        ))
+        .build()?;
 
     let report = AdvisorRequest::custom(net, policy).run()?;
     if args.flag("json") {

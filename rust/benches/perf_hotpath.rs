@@ -5,7 +5,9 @@
 //! * softfloat quantize + sequential/chunked accumulation;
 //! * reduced-precision GEMM (the native trainer's inner loop);
 //! * a full Monte-Carlo VRR point;
-//! * telemetry overhead: the memoized sweep with recording off vs on.
+//! * telemetry overhead: the memoized sweep with recording off vs on;
+//! * serve throughput: a 200-line advisor batch through the pooled
+//!   pipeline at 1 / 2 / 4 workers.
 //!
 //! Run before/after each optimization; EXPERIMENTS.md §Perf records the
 //! iteration log. Besides the human-readable table, the run writes a
@@ -18,6 +20,7 @@
 use std::time::Duration;
 
 use abws::api::cache::SolveCache;
+use abws::api::{serve_with, ServeOptions};
 use abws::mc::{empirical_vrr, McConfig};
 use abws::nets::alexnet::alexnet_imagenet;
 use abws::nets::nzr::NzrModel;
@@ -189,6 +192,44 @@ fn main() {
     }));
     phases.close("mc");
 
+    // --- serve pipeline throughput ---------------------------------------------
+    // A 200-line advisor batch over the three builtin networks, answered
+    // through the pooled `serve_with` pipeline. The first (unmeasured)
+    // pass warms the process-global solve cache so every arm measures the
+    // same memoized workload; the arms differ only in worker count.
+    let batch: String = (0..200)
+        .map(|i| {
+            let net = ["resnet32", "resnet18", "alexnet"][i % 3];
+            format!("{{\"type\":\"advisor\",\"network\":\"{net}\",\"id\":{i}}}\n")
+        })
+        .collect();
+    let serve_once = |workers: usize| {
+        let opts = ServeOptions {
+            workers,
+            ..ServeOptions::default()
+        };
+        let mut sink = Vec::with_capacity(1 << 20);
+        serve_with(batch.as_bytes(), &mut sink, &opts).expect("serve bench batch failed");
+        sink.len()
+    };
+    serve_once(1); // warm the solve cache
+    let mut serve_throughput = Json::obj();
+    for workers in [1usize, 2, 4] {
+        let m = bench(
+            &format!("serve 200 advisors, {workers} worker(s)"),
+            budget,
+            || std::hint::black_box(serve_once(workers)),
+        );
+        let reqs_per_s = 200.0 / m.median.as_secs_f64().max(1e-12);
+        println!("  -> {workers} worker(s): {reqs_per_s:.0} req/s");
+        let mut arm = Json::obj();
+        arm.set("median_ns", m.median.as_nanos() as u64);
+        arm.set("requests_per_sec", reqs_per_s);
+        serve_throughput.set(&format!("workers_{workers}"), arm);
+        results.push(m);
+    }
+    phases.close("serve");
+
     // --- machine-readable output ----------------------------------------------
     let mut root = Json::obj();
     root.set(
@@ -201,10 +242,16 @@ fn main() {
     overhead.set("on_median_ns", tel_on.median.as_nanos() as u64);
     overhead.set("overhead_pct", overhead_pct);
     root.set("telemetry_overhead", overhead);
+    root.set("serve_throughput", serve_throughput);
 
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf.json");
     match std::fs::write(path, format!("{root}\n")) {
         Ok(()) => println!("wrote {path}"),
-        Err(e) => eprintln!("could not write {path}: {e}"),
+        Err(e) => {
+            // The JSON artifact is the whole point of the run: a silent
+            // skip would let CI report a perf pass with no record.
+            eprintln!("FATAL: could not write {path}: {e}");
+            std::process::exit(1);
+        }
     }
 }

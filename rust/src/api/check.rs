@@ -1,0 +1,200 @@
+//! `check` requests: guaranteed-overflow-avoidance style suitability
+//! queries for a single accumulation.
+//!
+//! Where `advisor` answers "what widths does this whole network need",
+//! `check` answers the pointwise question: for one length-`n`
+//! accumulation under a policy, what is the minimum suitable `m_acc` —
+//! and, if the client proposes a width, is *that* width suitable and
+//! what variance retention does it achieve? All solving goes through the
+//! process-wide memoized [`crate::api::cache`], so batches of checks hit
+//! the fast path.
+
+use anyhow::{ensure, Context, Result};
+
+use super::cache;
+use super::policy::PrecisionPolicy;
+use crate::util::json::Json;
+
+/// One suitability query: a policy, an accumulation length, a sparsity
+/// (non-zero ratio), and optionally a proposed accumulator width.
+#[derive(Clone, Debug)]
+pub struct CheckRequest {
+    pub policy: PrecisionPolicy,
+    /// Accumulation length (dot-product length).
+    pub n: usize,
+    /// Non-zero ratio of the operands (1.0 = dense).
+    pub nzr: f64,
+    /// Proposed accumulator mantissa width to check, if any.
+    pub m_acc: Option<u32>,
+}
+
+impl CheckRequest {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("type", "check");
+        j.set("policy", self.policy.to_json());
+        j.set("n", self.n);
+        j.set("nzr", self.nzr);
+        j.set("m_acc", self.m_acc.map(Json::from).unwrap_or(Json::Null));
+        j
+    }
+
+    /// Parse the wire form. `n` is required; `nzr` defaults to dense
+    /// (1.0); `m_acc` is optional; type-mismatched fields are errors.
+    pub fn from_json(j: &Json) -> Result<CheckRequest> {
+        let policy = match j.get("policy") {
+            Some(p) => PrecisionPolicy::from_json(p).context("parsing 'policy'")?,
+            None => PrecisionPolicy::paper(),
+        };
+        let n = super::opt_num(j, "n")?.context("check request needs 'n'")? as usize;
+        let nzr = super::opt_num(j, "nzr")?.unwrap_or(1.0);
+        let m_acc = super::opt_num(j, "m_acc")?.map(|v| v as u32);
+        Ok(CheckRequest {
+            policy,
+            n,
+            nzr,
+            m_acc,
+        })
+    }
+
+    /// Validate and answer through the memoized solver.
+    pub fn run(&self) -> Result<CheckReport> {
+        self.policy.validate()?;
+        ensure!(
+            (0.0..=1.0).contains(&self.nzr),
+            "nzr must be in [0,1], got {}",
+            self.nzr
+        );
+        if let Some(m) = self.m_acc {
+            ensure!((1..=52).contains(&m), "m_acc must be in 1..=52, got {m}");
+        }
+        let spec = self.policy.checked_accum_spec(self.n, self.nzr)?;
+        let min_m_acc = cache::min_m_acc(&spec);
+        let proposed = self.m_acc.map(|m| {
+            let vrr = cache::vrr(&spec, m);
+            (spec.suitable(m), vrr)
+        });
+        Ok(CheckReport {
+            n: self.n,
+            nzr: self.nzr,
+            m_acc: self.m_acc,
+            min_m_acc,
+            proposed,
+        })
+    }
+}
+
+/// The suitability answer for one accumulation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CheckReport {
+    pub n: usize,
+    pub nzr: f64,
+    /// The proposed width echoed back, if the request carried one.
+    pub m_acc: Option<u32>,
+    /// Minimum suitable accumulator mantissa width (Theorem 1).
+    pub min_m_acc: u32,
+    /// `(suitable, vrr)` of the proposed width, if one was given.
+    pub proposed: Option<(bool, f64)>,
+}
+
+impl CheckReport {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("type", "check_report");
+        j.set("n", self.n);
+        j.set("nzr", self.nzr);
+        j.set("m_acc", self.m_acc.map(Json::from).unwrap_or(Json::Null));
+        j.set("min_m_acc", self.min_m_acc);
+        match self.proposed {
+            Some((suitable, vrr)) => {
+                j.set("suitable", suitable);
+                // The chunked-VRR closed form can overflow to ±inf for
+                // tiny widths; JSON has no Inf, so degrade to null.
+                j.set(
+                    "vrr",
+                    if vrr.is_finite() {
+                        Json::Num(vrr)
+                    } else {
+                        Json::Null
+                    },
+                );
+            }
+            None => {
+                j.set("suitable", Json::Null);
+                j.set("vrr", Json::Null);
+            }
+        }
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_agrees_with_direct_solver() {
+        let req = CheckRequest {
+            policy: PrecisionPolicy::paper(),
+            n: 4096,
+            nzr: 1.0,
+            m_acc: Some(12),
+        };
+        let report = req.run().unwrap();
+        let spec = req.policy.accum_spec(4096, 1.0);
+        assert_eq!(report.min_m_acc, crate::vrr::solver::min_m_acc(&spec));
+        let (suitable, vrr) = report.proposed.unwrap();
+        assert_eq!(suitable, spec.suitable(12));
+        assert_eq!(vrr.to_bits(), spec.vrr(12).to_bits());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let req = CheckRequest {
+            policy: PrecisionPolicy::paper().with_chunk(Some(64)),
+            n: 1000,
+            nzr: 0.5,
+            m_acc: Some(9),
+        };
+        let text = req.to_json().to_string();
+        let back = CheckRequest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string(), text);
+        assert_eq!(back.n, 1000);
+        assert_eq!(back.m_acc, Some(9));
+    }
+
+    #[test]
+    fn report_shape_without_proposed_width() {
+        let req = CheckRequest {
+            policy: PrecisionPolicy::paper(),
+            n: 64,
+            nzr: 1.0,
+            m_acc: None,
+        };
+        let j = req.run().unwrap().to_json();
+        assert_eq!(j.get("type").unwrap().as_str(), Some("check_report"));
+        assert_eq!(j.get("m_acc"), Some(&Json::Null));
+        assert_eq!(j.get("suitable"), Some(&Json::Null));
+        assert!(j.get("min_m_acc").unwrap().as_f64().unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn rejects_nonsense() {
+        let mut req = CheckRequest {
+            policy: PrecisionPolicy::paper(),
+            n: 64,
+            nzr: 1.0,
+            m_acc: None,
+        };
+        req.nzr = 1.5;
+        assert!(req.run().is_err());
+        req.nzr = 1.0;
+        req.m_acc = Some(0);
+        assert!(req.run().is_err());
+        req.m_acc = None;
+        req.n = 0;
+        assert!(req.run().is_err());
+        // n required on the wire.
+        assert!(CheckRequest::from_json(&Json::parse(r#"{"type":"check"}"#).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,152 @@
+//! The one error shape every `api` failure path speaks: an [`ApiError`]
+//! carrying a machine-readable [`ErrorKind`] plus a human message.
+//!
+//! `serve` renders failures as
+//! `{"error": {"kind": "...", "message": "..."}}` lines (plus a
+//! deprecated top-level `"message"` string kept for one release — see
+//! `docs/serve.md`), so batch clients can switch on `kind` instead of
+//! grepping prose:
+//!
+//! * `parse` — the request line is not valid JSON;
+//! * `invalid` — well-formed JSON but a bad request (unknown type,
+//!   unknown network, type-mismatched field, unsupported envelope
+//!   version, policy that fails validation);
+//! * `timeout` — the request exceeded its `--timeout-ms` deadline;
+//! * `panic` — the handler panicked (isolated by the serve pipeline;
+//!   the batch keeps going);
+//! * `internal` — anything else that went wrong while executing an
+//!   otherwise valid request.
+
+use std::fmt;
+
+use crate::util::json::Json;
+
+/// Machine-readable failure category, serialized as the `"kind"` field
+/// of every serve error line.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Request line is not valid JSON.
+    Parse,
+    /// Valid JSON, invalid request.
+    Invalid,
+    /// The request exceeded its deadline.
+    Timeout,
+    /// The handler panicked.
+    Panic,
+    /// Execution failed on a valid request.
+    Internal,
+}
+
+impl ErrorKind {
+    /// The wire spelling (`"parse"`, `"invalid"`, …).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorKind::Parse => "parse",
+            ErrorKind::Invalid => "invalid",
+            ErrorKind::Timeout => "timeout",
+            ErrorKind::Panic => "panic",
+            ErrorKind::Internal => "internal",
+        }
+    }
+}
+
+impl fmt::Display for ErrorKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A kinded API failure. Implements [`std::error::Error`], so it
+/// converts into `anyhow::Error` via `?` where callers still speak
+/// `anyhow`.
+#[derive(Clone, Debug)]
+pub struct ApiError {
+    pub kind: ErrorKind,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn new(kind: ErrorKind, message: impl Into<String>) -> ApiError {
+        ApiError {
+            kind,
+            message: message.into(),
+        }
+    }
+
+    pub fn parse(message: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorKind::Parse, message)
+    }
+
+    pub fn invalid(message: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorKind::Invalid, message)
+    }
+
+    pub fn timeout(message: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorKind::Timeout, message)
+    }
+
+    pub fn panic(message: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorKind::Panic, message)
+    }
+
+    pub fn internal(message: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorKind::Internal, message)
+    }
+
+    /// The `{"kind": ..., "message": ...}` object serve embeds under
+    /// `"error"`.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("kind", self.kind.as_str());
+        j.set("message", self.message.as_str());
+        j
+    }
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.kind, self.message)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_have_stable_wire_names() {
+        let kinds = [
+            (ErrorKind::Parse, "parse"),
+            (ErrorKind::Invalid, "invalid"),
+            (ErrorKind::Timeout, "timeout"),
+            (ErrorKind::Panic, "panic"),
+            (ErrorKind::Internal, "internal"),
+        ];
+        for (k, name) in kinds {
+            assert_eq!(k.as_str(), name);
+        }
+    }
+
+    #[test]
+    fn json_shape_carries_kind_and_message() {
+        let e = ApiError::timeout("deadline exceeded after 12 steps");
+        let j = e.to_json();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("timeout"));
+        assert_eq!(
+            j.get("message").unwrap().as_str(),
+            Some("deadline exceeded after 12 steps")
+        );
+        assert_eq!(format!("{e}"), "timeout: deadline exceeded after 12 steps");
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn fails() -> anyhow::Result<()> {
+            Err(ApiError::invalid("bad policy"))?
+        }
+        let e = fails().unwrap_err();
+        assert!(format!("{e:#}").contains("bad policy"));
+    }
+}

@@ -13,10 +13,17 @@
 //! * [`TrainRequest`] → [`TrainReport`](train::TrainReport) (in
 //!   [`train`]) — native reduced-precision training runs under a
 //!   baseline / uniform / solver-predicted plan.
+//! * [`CheckRequest`] → [`CheckReport`](check::CheckReport) (in
+//!   [`check`]) — pointwise suitability queries: minimum `m_acc` for one
+//!   accumulation, plus suitability/VRR of a proposed width.
 //! * [`cache`] — the memoized VRR solve cache all API queries share, so
 //!   repeated `min_m_acc` sweeps stop re-running the O(n) crossing sums.
+//! * [`error`] — the unified [`ApiError`]/[`ErrorKind`] failure shape
+//!   every serve error line carries.
 //! * [`serve`] — the batch front-end: newline-delimited JSON requests in,
-//!   one JSON report per line out (`abws serve` on the CLI).
+//!   one JSON report per line out (`abws serve` on the CLI). [`serve_with`]
+//!   runs the same batch through a pooled pipeline with ordered replies,
+//!   backpressure, per-request deadlines and panic isolation.
 //!
 //! ```no_run
 //! use abws::api::{AdvisorRequest, PrecisionPolicy};
@@ -29,13 +36,17 @@
 
 pub mod advisor;
 pub mod cache;
+pub mod check;
+pub mod error;
 pub mod policy;
 pub mod serve;
 pub mod train;
 
 pub use advisor::{advise_builtin, builtin_keys, AdvisorReport, AdvisorRequest, NetworkSpec};
-pub use policy::{baseline_plan, fp8_ideal_acc_plan, PrecisionPolicy};
-pub use serve::{serve, ServeStats};
+pub use check::{CheckReport, CheckRequest};
+pub use error::{ApiError, ErrorKind};
+pub use policy::{baseline_plan, fp8_ideal_acc_plan, PrecisionPolicy, PrecisionPolicyBuilder};
+pub use serve::{default_workers, serve, serve_with, ServeOptions, ServeStats};
 pub use train::{PlanSpec, TrainReport, TrainRequest};
 
 /// Strict optional-number accessor for the request codecs: absent or

@@ -74,6 +74,14 @@ impl PrecisionPolicy {
         }
     }
 
+    /// Start a [`PrecisionPolicyBuilder`] from the paper defaults.
+    /// Unlike the `with_*` combinators, the builder validates at
+    /// [`PrecisionPolicyBuilder::build`], so invalid configurations fail
+    /// before they ever reach the solver.
+    pub fn builder() -> PrecisionPolicyBuilder {
+        PrecisionPolicyBuilder::default()
+    }
+
     pub fn with_chunk(mut self, chunk: Option<usize>) -> PrecisionPolicy {
         self.chunk = chunk;
         self
@@ -135,6 +143,25 @@ impl PrecisionPolicy {
             nzr,
             chunk: self.chunk,
         }
+    }
+
+    /// [`Self::accum_spec`] for callers with an *explicit* accumulation
+    /// length (`check` requests, `abws vrr`): rejects zero-length
+    /// accumulations and chunks longer than the accumulation itself,
+    /// which the closed forms would silently accept and answer
+    /// nonsensically. The implicit-length paths (advisor, trainer) keep
+    /// using `accum_spec` directly, where a policy chunk larger than one
+    /// particular GEMM dimension legitimately degrades to sequential.
+    pub fn checked_accum_spec(&self, n: usize, nzr: f64) -> Result<AccumSpec> {
+        if n == 0 {
+            bail!("zero-length accumulation (n must be >= 1)");
+        }
+        if let Some(c) = self.chunk {
+            if c > n {
+                bail!("chunk {c} is larger than the accumulation length {n}");
+            }
+        }
+        Ok(self.accum_spec(n, nzr))
     }
 
     /// The softfloat GEMM configuration at accumulator width `m_acc`.
@@ -245,6 +272,87 @@ impl PrecisionPolicy {
         }
         p.validate()?;
         Ok(p)
+    }
+}
+
+/// Builder for [`PrecisionPolicy`] with validation at [`Self::build`].
+///
+/// Starts from the paper defaults; every setter overrides one field.
+/// `build()` runs [`PrecisionPolicy::validate`], so a zero `m_p`, a
+/// zero chunk, or an out-of-range sparsity fails here instead of deep
+/// inside the solver.
+///
+/// ```
+/// use abws::api::PrecisionPolicy;
+///
+/// let policy = PrecisionPolicy::builder().m_p(4).chunk(64).build().unwrap();
+/// assert_eq!(policy.chunk, Some(64));
+/// assert!(PrecisionPolicy::builder().m_p(0).build().is_err());
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct PrecisionPolicyBuilder {
+    policy: PrecisionPolicy,
+}
+
+impl PrecisionPolicyBuilder {
+    /// Representation format quantizing GEMM inputs (`None` = keep f32).
+    pub fn repr(mut self, repr: Option<FpFormat>) -> Self {
+        self.policy.repr = repr;
+        self
+    }
+
+    /// Product-term format.
+    pub fn prod(mut self, prod: FpFormat) -> Self {
+        self.policy.prod = prod;
+        self
+    }
+
+    /// Accumulator exponent bits.
+    pub fn acc_exp_bits(mut self, bits: u32) -> Self {
+        self.policy.acc_exp_bits = bits;
+        self
+    }
+
+    /// Product mantissa width for the VRR analysis.
+    pub fn m_p(mut self, m_p: u32) -> Self {
+        self.policy.m_p = m_p;
+        self
+    }
+
+    /// Two-level accumulation with this chunk size.
+    pub fn chunk(mut self, chunk: usize) -> Self {
+        self.policy.chunk = Some(chunk);
+        self
+    }
+
+    /// Chunking from an `Option` (CLI flags that may be absent).
+    pub fn maybe_chunk(mut self, chunk: Option<usize>) -> Self {
+        self.policy.chunk = chunk;
+        self
+    }
+
+    /// Sequential (unchunked) accumulation.
+    pub fn sequential(mut self) -> Self {
+        self.policy.chunk = None;
+        self
+    }
+
+    /// Mantissa rounding mode.
+    pub fn rounding(mut self, rounding: Rounding) -> Self {
+        self.policy.rounding = rounding;
+        self
+    }
+
+    /// Sparsity model.
+    pub fn nzr(mut self, nzr: NzrModel) -> Self {
+        self.policy.nzr = Some(nzr);
+        self
+    }
+
+    /// Validate and return the policy.
+    pub fn build(self) -> Result<PrecisionPolicy> {
+        self.policy.validate()?;
+        Ok(self.policy)
     }
 }
 
@@ -377,6 +485,46 @@ mod tests {
             .with_nzr(NzrModel::uniform(1.0, 0.5, 1.5))
             .validate()
             .is_err());
+    }
+
+    #[test]
+    fn builder_validates_at_build() {
+        let p = PrecisionPolicy::builder()
+            .m_p(7)
+            .chunk(128)
+            .rounding(Rounding::TowardZero)
+            .build()
+            .unwrap();
+        assert_eq!(p.m_p, 7);
+        assert_eq!(p.chunk, Some(128));
+        assert_eq!(p.rounding, Rounding::TowardZero);
+        // Untouched fields keep the paper defaults.
+        assert_eq!(p.acc_exp_bits, 6);
+        assert_eq!(p.prod, FpFormat::PROD_FP8);
+
+        assert!(PrecisionPolicy::builder().m_p(0).build().is_err());
+        assert!(PrecisionPolicy::builder().m_p(53).build().is_err());
+        assert!(PrecisionPolicy::builder().chunk(0).build().is_err());
+        assert!(PrecisionPolicy::builder().acc_exp_bits(1).build().is_err());
+        assert!(PrecisionPolicy::builder()
+            .nzr(NzrModel::uniform(1.0, 0.5, 1.5))
+            .build()
+            .is_err());
+        let seq = PrecisionPolicy::builder().chunk(64).sequential().build().unwrap();
+        assert!(seq.chunk.is_none());
+        let opt = PrecisionPolicy::builder().maybe_chunk(Some(32)).build().unwrap();
+        assert_eq!(opt.chunk, Some(32));
+    }
+
+    #[test]
+    fn checked_accum_spec_rejects_degenerate_lengths() {
+        let p = PrecisionPolicy::paper().with_chunk(Some(64));
+        assert!(p.checked_accum_spec(0, 1.0).is_err());
+        assert!(p.checked_accum_spec(32, 1.0).is_err()); // chunk 64 > n 32
+        let spec = p.checked_accum_spec(4096, 0.5).unwrap();
+        assert_eq!(spec, p.accum_spec(4096, 0.5));
+        // Sequential policies only reject n == 0.
+        assert!(PrecisionPolicy::paper().checked_accum_spec(1, 1.0).is_ok());
     }
 
     #[test]

@@ -1,30 +1,62 @@
 //! The batch front door: newline-delimited JSON requests in, one JSON
-//! report per line out.
+//! report per line out — sequentially or through a pooled, fault-isolated
+//! pipeline.
+//!
+//! ## The v1 envelope
 //!
 //! Each input line is a JSON object whose `"type"` selects the handler —
-//! `"advisor"` (the default when omitted) or `"train"`. A malformed or
-//! failing request produces an `{"error": "..."}` line *in its position*
-//! and the stream keeps going, so a batch client can zip requests to
-//! responses by line number. The output is flushed after every line, so
-//! a downstream pipe consumer sees each response as soon as it exists
-//! rather than at buffer boundaries. All solving shares the process-wide
+//! `"advisor"` (the default when omitted), `"train"`, or `"check"`. Two
+//! optional envelope fields ride along: `"v"` (protocol version; missing
+//! means v1, anything other than 1 is a structured error) and `"id"`
+//! (any JSON value, echoed back verbatim in the matching reply or error
+//! line so concurrent clients can correlate without relying on line
+//! order). A malformed or failing request produces an
+//! `{"error": {"kind": ..., "message": ...}}` line *in its position*
+//! (plus a deprecated top-level `"message"` string — see
+//! `docs/serve.md`) and the stream keeps going, so a batch client can
+//! zip requests to responses by line number. The output is flushed after
+//! every line. All solving shares the process-wide
 //! [`crate::api::cache`], so a sweep of similar requests gets the
 //! memoized fast path after the first.
+//!
+//! ## The concurrent pipeline
+//!
+//! [`serve_with`] at `workers >= 2` runs a reader thread feeding a
+//! bounded admission gate (`queue_depth` waiting requests beyond the
+//! workers — the reader blocks when the batch runs ahead, which is what
+//! propagates backpressure up the OS pipe), a pool of workers executing
+//! requests, and an in-order reassembly stage on the calling thread that
+//! buffers out-of-order completions and writes replies strictly in input
+//! order. Output is **byte-identical** to sequential mode. Every request
+//! runs under [`std::panic::catch_unwind`], so a panicking handler
+//! yields an error line of kind `panic` in its slot instead of killing
+//! the batch, and an optional per-request deadline (`timeout_ms`)
+//! degrades slow requests to kind `timeout` (the `train` step loop
+//! checks it cooperatively between steps).
 //!
 //! ## Telemetry
 //!
 //! When [`crate::telemetry`] is enabled (the default), every request
 //! records into `abws_serve_latency_ns`, bumps
 //! `abws_serve_requests_total{type=...}` (types `advisor`, `train`,
-//! `unknown`, `invalid`), counts failures in `abws_serve_errors_total`,
-//! and tracks in-flight work in the `abws_serve_queue_depth` gauge.
+//! `check`, `test`, `unknown`, `invalid`), counts failures in
+//! `abws_serve_errors_total`, and tracks in-flight work in the
+//! `abws_serve_queue_depth` gauge. The pipeline additionally records
+//! per-request time-in-queue into `abws_serve_queue_wait_ns` and each
+//! worker's busy percentage into `abws_serve_worker_utilization_pct`.
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, Write};
-use std::sync::Arc;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{Context, Result};
 
 use super::advisor::AdvisorRequest;
+use super::check::CheckRequest;
+use super::error::{ApiError, ErrorKind};
 use super::train::TrainRequest;
 use crate::telemetry::{self, labeled, Counter, Gauge, Histogram, Timer};
 use crate::util::json::Json;
@@ -34,66 +66,296 @@ use crate::util::json::Json;
 pub struct ServeStats {
     /// Non-empty request lines seen.
     pub requests: usize,
-    /// Requests answered with an `{"error": ...}` line.
+    /// Requests answered with an `{"error": ...}` line (any kind).
     pub errors: usize,
+    /// The subset of `errors` with kind `timeout`.
+    pub timeouts: usize,
+    /// The subset of `errors` with kind `panic`.
+    pub panics: usize,
+}
+
+impl ServeStats {
+    fn tally(&mut self, reply: &Reply) {
+        self.requests += 1;
+        if reply.failed {
+            self.errors += 1;
+        }
+        if reply.timed_out {
+            self.timeouts += 1;
+        }
+        if reply.panicked {
+            self.panics += 1;
+        }
+    }
+}
+
+/// Knobs for [`serve_with`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServeOptions {
+    /// Worker threads; `0` means one per available core
+    /// ([`default_workers`]), `1` is the sequential path.
+    pub workers: usize,
+    /// Requests admitted beyond the workers (read but not yet picked
+    /// up). The reader blocks once `queue_depth + workers` requests are
+    /// in flight.
+    pub queue_depth: usize,
+    /// Per-request deadline in milliseconds (`None` = no deadline).
+    pub timeout_ms: Option<u64>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            workers: 1,
+            queue_depth: 128,
+            timeout_ms: None,
+        }
+    }
+}
+
+/// The default worker count for `workers: 0`: one per available core.
+pub fn default_workers() -> usize {
+    crate::coordinator::sweep::default_threads()
 }
 
 /// Request-type labels used by `abws_serve_requests_total{type=...}`.
-const REQUEST_TYPES: [&str; 4] = ["advisor", "train", "unknown", "invalid"];
+/// Hidden test-only request types (`__panic`, `__sleep`) collapse to
+/// `test` to keep label cardinality bounded.
+const REQUEST_TYPES: [&str; 6] = ["advisor", "train", "check", "test", "unknown", "invalid"];
 
-/// Handle one request line, returning the type label (for metrics) and
-/// the report JSON.
-fn handle_request_labeled(line: &str) -> (&'static str, Result<Json>) {
+/// A parsed v1 request envelope: the body, the correlation id to echo,
+/// and the dispatch type.
+struct Envelope {
+    body: Json,
+    id: Option<Json>,
+    ty: String,
+}
+
+/// Parse a line into an [`Envelope`]. On failure, the error comes back
+/// with whatever `"id"` could still be recovered (JSON that parsed but
+/// had a bad version still correlates).
+fn parse_envelope(line: &str) -> Result<Envelope, (ApiError, Option<Json>)> {
     let j = match Json::parse(line) {
         Ok(j) => j,
-        Err(e) => return ("invalid", Err(anyhow!("bad request JSON: {e}"))),
+        Err(e) => return Err((ApiError::parse(format!("bad request JSON: {e}")), None)),
     };
     if !matches!(j, Json::Obj(_)) {
-        return ("invalid", Err(anyhow!("request must be a JSON object")));
+        return Err((ApiError::invalid("request must be a JSON object"), None));
+    }
+    let id = j.get("id").cloned();
+    match j.get("v") {
+        None | Some(Json::Null) => {}
+        Some(Json::Num(v)) if *v == 1.0 => {}
+        Some(other) => {
+            return Err((
+                ApiError::invalid(format!(
+                    "unsupported envelope version {other} (this server speaks v1)"
+                )),
+                id,
+            ))
+        }
     }
     let ty = match j.get("type") {
-        None => "advisor",
-        Some(Json::Str(s)) => s.as_str(),
+        None => "advisor".to_string(),
+        Some(Json::Str(s)) => s.clone(),
         Some(other) => {
-            return (
-                "invalid",
-                Err(anyhow!("'type' must be a string, got {other}")),
-            )
+            return Err((
+                ApiError::invalid(format!("'type' must be a string, got {other}")),
+                id,
+            ))
         }
     };
+    Ok(Envelope { body: j, id, ty })
+}
+
+/// Metric label for a request type.
+fn label_for(ty: &str) -> &'static str {
     match ty {
-        "advisor" => (
-            "advisor",
-            (|| Ok(AdvisorRequest::from_json(&j)?.run()?.to_json()))(),
-        ),
-        "train" => (
-            "train",
-            (|| Ok(TrainRequest::from_json(&j)?.resolve()?.run().to_json()))(),
-        ),
-        other => (
-            "unknown",
-            Err(anyhow!("unknown request type '{other}' (advisor|train)")),
-        ),
+        "advisor" => "advisor",
+        "train" => "train",
+        "check" => "check",
+        "__panic" | "__sleep" => "test",
+        _ => "unknown",
     }
 }
 
-/// Handle one request line, returning the report JSON.
+/// Map a request-shaped `anyhow` failure to kind `invalid`.
+fn invalid(e: anyhow::Error) -> ApiError {
+    ApiError::invalid(format!("{e:#}"))
+}
+
+fn run_advisor(j: &Json) -> Result<Json, ApiError> {
+    let req = AdvisorRequest::from_json(j).map_err(invalid)?;
+    let report = req.run().map_err(invalid)?;
+    Ok(report.to_json())
+}
+
+fn run_train(j: &Json, deadline: Option<Instant>) -> Result<Json, ApiError> {
+    let req = TrainRequest::from_json(j).map_err(invalid)?;
+    let resolved = req.resolve().map_err(invalid)?;
+    let report = resolved.run_with_deadline(deadline)?;
+    Ok(report.to_json())
+}
+
+fn run_check(j: &Json) -> Result<Json, ApiError> {
+    let req = CheckRequest::from_json(j).map_err(invalid)?;
+    let report = req.run().map_err(invalid)?;
+    Ok(report.to_json())
+}
+
+/// Hidden test-only handler: sleep for `"ms"` in 1 ms cooperative
+/// slices, honoring the deadline. Exists so integration tests can force
+/// out-of-order completion and timeouts deterministically.
+fn run_sleep(j: &Json, deadline: Option<Instant>) -> Result<Json, ApiError> {
+    let ms = super::opt_num(j, "ms").map_err(invalid)?.unwrap_or(10.0);
+    if !ms.is_finite() || ms < 0.0 {
+        return Err(ApiError::invalid(format!("'ms' must be >= 0, got {ms}")));
+    }
+    let ms = ms as u64;
+    let target = Instant::now() + Duration::from_millis(ms);
+    loop {
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                return Err(ApiError::timeout(format!(
+                    "__sleep request exceeded its deadline before {ms}ms elapsed"
+                )));
+            }
+        }
+        let now = Instant::now();
+        if now >= target {
+            break;
+        }
+        std::thread::sleep((target - now).min(Duration::from_millis(1)));
+    }
+    let mut report = Json::obj();
+    report.set("type", "__sleep_report");
+    report.set("ms", ms);
+    Ok(report)
+}
+
+/// Route an envelope to its handler.
+fn dispatch(env: &Envelope, deadline: Option<Instant>) -> Result<Json, ApiError> {
+    match env.ty.as_str() {
+        "advisor" => run_advisor(&env.body),
+        "train" => run_train(&env.body, deadline),
+        "check" => run_check(&env.body),
+        // Hidden test-only handlers (integration tests can't see
+        // cfg(test) items, so these are always compiled but
+        // undocumented).
+        "__panic" => panic!("injected panic from the hidden '__panic' test request"),
+        "__sleep" => run_sleep(&env.body, deadline),
+        other => Err(ApiError::invalid(format!(
+            "unknown request type '{other}' (advisor|train|check)"
+        ))),
+    }
+}
+
+/// Handle one request line, returning the report JSON. Legacy
+/// single-request entry point; the envelope's `id` is echoed into the
+/// report, and failures come back as `anyhow` errors carrying the
+/// [`ApiError`] message.
 pub fn handle_request(line: &str) -> Result<Json> {
-    handle_request_labeled(line).1
+    let env = parse_envelope(line).map_err(|(e, _)| anyhow::Error::from(e))?;
+    let mut report = dispatch(&env, None).map_err(anyhow::Error::from)?;
+    if let Some(id) = &env.id {
+        report.set("id", id.clone());
+    }
+    Ok(report)
+}
+
+/// One fully-rendered response line with the flags the stats/telemetry
+/// tally needs.
+#[derive(Clone, Debug)]
+struct Reply {
+    ty: &'static str,
+    line: String,
+    failed: bool,
+    timed_out: bool,
+    panicked: bool,
+}
+
+fn error_reply(ty: &'static str, err: ApiError, id: Option<Json>) -> Reply {
+    let mut o = Json::obj();
+    o.set("error", err.to_json());
+    // Deprecated: the pre-v1 bare-string error field, kept for one
+    // release (see docs/serve.md).
+    o.set("message", err.message.as_str());
+    if let Some(id) = id {
+        o.set("id", id);
+    }
+    Reply {
+        ty,
+        line: o.to_string(),
+        failed: true,
+        timed_out: err.kind == ErrorKind::Timeout,
+        panicked: err.kind == ErrorKind::Panic,
+    }
+}
+
+/// Best-effort text of a panic payload (`&str` and `String` payloads
+/// cover `panic!`; anything else is opaque).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+/// Execute one trimmed request line end to end: envelope, deadline,
+/// panic isolation, id echo. Both the sequential and the concurrent
+/// paths answer through this one function — that is what makes their
+/// output byte-identical.
+fn handle_line(line: &str, timeout_ms: Option<u64>) -> Reply {
+    let env = match parse_envelope(line) {
+        Ok(env) => env,
+        Err((err, id)) => return error_reply("invalid", err, id),
+    };
+    let ty = label_for(&env.ty);
+    let deadline = timeout_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+    match catch_unwind(AssertUnwindSafe(|| dispatch(&env, deadline))) {
+        Ok(Ok(mut report)) => {
+            if let Some(id) = &env.id {
+                report.set("id", id.clone());
+            }
+            Reply {
+                ty,
+                line: report.to_string(),
+                failed: false,
+                timed_out: false,
+                panicked: false,
+            }
+        }
+        Ok(Err(err)) => error_reply(ty, err, env.id),
+        Err(payload) => error_reply(
+            ty,
+            ApiError::panic(format!(
+                "request handler panicked: {}",
+                panic_message(payload.as_ref())
+            )),
+            env.id,
+        ),
+    }
 }
 
 /// Metric handles for one serve session, resolved once up front.
 struct ServeTelemetry {
     latency: Arc<Histogram>,
+    queue_wait: Arc<Histogram>,
+    worker_utilization: Arc<Histogram>,
     errors: Arc<Counter>,
     queue_depth: Arc<Gauge>,
-    requests: [(&'static str, Arc<Counter>); 4],
+    requests: [(&'static str, Arc<Counter>); REQUEST_TYPES.len()],
 }
 
 impl ServeTelemetry {
     fn new() -> ServeTelemetry {
         ServeTelemetry {
             latency: telemetry::histogram("abws_serve_latency_ns"),
+            queue_wait: telemetry::histogram("abws_serve_queue_wait_ns"),
+            worker_utilization: telemetry::histogram("abws_serve_worker_utilization_pct"),
             errors: telemetry::counter("abws_serve_errors_total"),
             queue_depth: telemetry::gauge("abws_serve_queue_depth"),
             requests: REQUEST_TYPES.map(|ty| {
@@ -108,14 +370,53 @@ impl ServeTelemetry {
             c.inc();
         }
     }
+
+    /// Per-reply bookkeeping shared by both paths (latency, type count,
+    /// error count).
+    fn record_reply(&self, reply: &Reply, elapsed_ns: u64) {
+        self.latency.record(elapsed_ns);
+        self.count_request(reply.ty);
+        if reply.failed {
+            self.errors.inc();
+        }
+    }
 }
 
-/// Serve newline-delimited JSON requests from `input` to `out` until EOF.
-/// Blank lines are skipped; per-request failures become error lines, not
-/// stream failures. Every response line (including error lines) is
-/// flushed before the next request is read.
-pub fn serve<R: BufRead, W: Write>(input: R, mut out: W) -> Result<ServeStats> {
+/// Serve newline-delimited JSON requests from `input` to `out` until
+/// EOF with the default options (sequential, no deadline). Blank lines
+/// are skipped; per-request failures become error lines, not stream
+/// failures. Every response line (including error lines) is flushed
+/// before the next is written.
+pub fn serve<R: BufRead + Send, W: Write>(input: R, out: W) -> Result<ServeStats> {
+    serve_with(input, out, &ServeOptions::default())
+}
+
+/// [`serve`] with explicit [`ServeOptions`]. `workers >= 2` runs the
+/// concurrent pipeline; output stays byte-identical to sequential mode.
+pub fn serve_with<R: BufRead + Send, W: Write>(
+    input: R,
+    out: W,
+    opts: &ServeOptions,
+) -> Result<ServeStats> {
+    let workers = if opts.workers == 0 {
+        default_workers()
+    } else {
+        opts.workers
+    };
     let tel = telemetry::enabled().then(ServeTelemetry::new);
+    if workers <= 1 {
+        serve_sequential(input, out, opts.timeout_ms, tel.as_ref())
+    } else {
+        serve_concurrent(input, out, workers, opts, tel.as_ref())
+    }
+}
+
+fn serve_sequential<R: BufRead, W: Write>(
+    input: R,
+    mut out: W,
+    timeout_ms: Option<u64>,
+    tel: Option<&ServeTelemetry>,
+) -> Result<ServeStats> {
     let mut stats = ServeStats::default();
     for line in input.lines() {
         let line = line.context("reading request line")?;
@@ -123,35 +424,220 @@ pub fn serve<R: BufRead, W: Write>(input: R, mut out: W) -> Result<ServeStats> {
         if trimmed.is_empty() {
             continue;
         }
-        stats.requests += 1;
-        if let Some(t) = &tel {
+        if let Some(t) = tel {
             t.queue_depth.inc();
         }
-        let timer = tel.as_ref().map(|_| Timer::start());
-        let (ty, result) = handle_request_labeled(trimmed);
-        let failed = result.is_err();
-        let response = match result {
-            Ok(report) => report,
-            Err(e) => {
-                stats.errors += 1;
-                let mut o = Json::obj();
-                o.set("error", format!("{e:#}"));
-                o
-            }
-        };
-        if let Some(t) = &tel {
-            if let Some(timer) = &timer {
-                t.latency.record(timer.elapsed_ns());
-            }
-            t.count_request(ty);
-            if failed {
-                t.errors.inc();
-            }
+        let timer = Timer::start();
+        let reply = handle_line(trimmed, timeout_ms);
+        if let Some(t) = tel {
+            t.record_reply(&reply, timer.elapsed_ns());
             t.queue_depth.dec();
         }
-        writeln!(out, "{response}").context("writing response line")?;
+        stats.tally(&reply);
+        writeln!(out, "{}", reply.line).context("writing response line")?;
         out.flush().context("flushing response line")?;
     }
+    Ok(stats)
+}
+
+/// One admitted request traveling reader → worker.
+struct Job {
+    seq: u64,
+    line: String,
+    enqueued: Instant,
+}
+
+/// Counting semaphore bounding total in-flight requests (read but not
+/// yet written). Admission is FIFO-ish via the condvar, and — crucially
+/// — the *reader* is the only acquirer, so the request holding the next
+/// output slot is always already admitted: reassembly can never
+/// deadlock waiting for a request the gate is holding back.
+struct Gate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+struct GateState {
+    available: usize,
+    closed: bool,
+}
+
+impl Gate {
+    fn new(capacity: usize) -> Gate {
+        Gate {
+            state: Mutex::new(GateState {
+                available: capacity,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Block until a slot is free. Returns immediately (without taking a
+    /// slot) once the gate is closed.
+    fn acquire(&self) {
+        let mut st = self.state.lock().unwrap();
+        while st.available == 0 && !st.closed {
+            st = self.cv.wait(st).unwrap();
+        }
+        if !st.closed {
+            st.available -= 1;
+        }
+    }
+
+    fn release(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.available += 1;
+        self.cv.notify_one();
+    }
+
+    /// Unblock every waiter and make further acquires no-ops (shutdown
+    /// after a write error).
+    fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.cv.notify_all();
+    }
+}
+
+/// The worker loop: shared-dequeue from the job channel, execute, send
+/// `(seq, reply)` to reassembly. Records queue wait per job and its own
+/// busy percentage at exit.
+fn worker_loop(
+    jobs: &Mutex<mpsc::Receiver<Job>>,
+    results: mpsc::Sender<(u64, Reply)>,
+    timeout_ms: Option<u64>,
+    tel: Option<&ServeTelemetry>,
+) {
+    let started = Instant::now();
+    let mut busy_ns: u64 = 0;
+    // Not `while let`: on edition 2021 a while-let scrutinee temporary
+    // lives for the whole loop body, which would hold the dequeue lock
+    // across request execution and serialize the pool.
+    #[allow(clippy::while_let_loop)]
+    loop {
+        // The lock is held only for the blocking dequeue (released when
+        // this statement's temporary guard drops); execution is parallel.
+        let job = match jobs.lock().unwrap().recv() {
+            Ok(job) => job,
+            Err(_) => break, // reader done and queue drained
+        };
+        if let Some(t) = tel {
+            t.queue_wait.record_duration(job.enqueued.elapsed());
+        }
+        let timer = Timer::start();
+        let reply = handle_line(&job.line, timeout_ms);
+        let elapsed = timer.elapsed_ns();
+        busy_ns = busy_ns.saturating_add(elapsed);
+        if let Some(t) = tel {
+            t.record_reply(&reply, elapsed);
+        }
+        if results.send((job.seq, reply)).is_err() {
+            break; // reassembly gone (write error shutdown)
+        }
+    }
+    if let Some(t) = tel {
+        let lifetime_ns = started.elapsed().as_nanos().max(1);
+        let pct = (busy_ns as u128 * 100 / lifetime_ns).min(100) as u64;
+        t.worker_utilization.record(pct);
+    }
+}
+
+fn serve_concurrent<R: BufRead + Send, W: Write>(
+    input: R,
+    mut out: W,
+    workers: usize,
+    opts: &ServeOptions,
+    tel: Option<&ServeTelemetry>,
+) -> Result<ServeStats> {
+    let timeout_ms = opts.timeout_ms;
+    // Total in-flight bound: `queue_depth` waiting + one per worker.
+    // This also bounds the reassembly buffer, since every buffered reply
+    // still holds its gate slot until written.
+    let gate = Gate::new(opts.queue_depth.max(1) + workers);
+    let aborted = AtomicBool::new(false);
+    let (job_tx, job_rx) = mpsc::channel::<Job>();
+    let job_rx = Mutex::new(job_rx);
+    let (res_tx, res_rx) = mpsc::channel::<(u64, Reply)>();
+
+    let mut stats = ServeStats::default();
+    let mut write_result: Result<()> = Ok(());
+
+    std::thread::scope(|s| -> Result<()> {
+        let gate = &gate;
+        let aborted = &aborted;
+        let job_rx = &job_rx;
+
+        let reader = s.spawn(move || -> Result<()> {
+            let mut seq = 0u64;
+            for line in input.lines() {
+                let line = line.context("reading request line")?;
+                let trimmed = line.trim();
+                if trimmed.is_empty() {
+                    continue;
+                }
+                gate.acquire();
+                if aborted.load(Ordering::SeqCst) {
+                    break;
+                }
+                if let Some(t) = tel {
+                    t.queue_depth.inc();
+                }
+                let job = Job {
+                    seq,
+                    line: trimmed.to_string(),
+                    enqueued: Instant::now(),
+                };
+                seq += 1;
+                if job_tx.send(job).is_err() {
+                    break;
+                }
+            }
+            Ok(())
+        });
+
+        for _ in 0..workers {
+            let res_tx = res_tx.clone();
+            s.spawn(move || worker_loop(job_rx, res_tx, timeout_ms, tel));
+        }
+        // Reassembly holds no sender; the iterator below ends when the
+        // last worker exits.
+        drop(res_tx);
+
+        let mut pending: BTreeMap<u64, Reply> = BTreeMap::new();
+        let mut next_seq = 0u64;
+        for (seq, reply) in res_rx.iter() {
+            pending.insert(seq, reply);
+            // Admission is FIFO from one reader, so the reply for
+            // `next_seq` is always in flight — drain every run of
+            // consecutive sequence numbers as it completes.
+            while let Some(reply) = pending.remove(&next_seq) {
+                next_seq += 1;
+                gate.release();
+                if let Some(t) = tel {
+                    t.queue_depth.dec();
+                }
+                stats.tally(&reply);
+                if write_result.is_ok() {
+                    write_result = writeln!(out, "{}", reply.line)
+                        .context("writing response line")
+                        .and_then(|()| out.flush().context("flushing response line"));
+                    if write_result.is_err() {
+                        // Stop admitting; keep draining so every thread
+                        // exits and the scope joins cleanly.
+                        aborted.store(true, Ordering::SeqCst);
+                        gate.close();
+                    }
+                }
+            }
+        }
+
+        match reader.join() {
+            Ok(r) => r,
+            Err(_) => anyhow::bail!("serve reader thread panicked"),
+        }
+    })?;
+    write_result?;
     Ok(stats)
 }
 
@@ -173,6 +659,14 @@ mod tests {
     }
 
     #[test]
+    fn check_line_answers() {
+        let out = handle_request(r#"{"type":"check","n":4096,"m_acc":12}"#).unwrap();
+        assert_eq!(out.get("type").unwrap().as_str(), Some("check_report"));
+        assert!(out.get("min_m_acc").unwrap().as_f64().is_some());
+        assert!(out.get("suitable").unwrap().as_bool().is_some());
+    }
+
+    #[test]
     fn errors_are_lines_not_failures() {
         let input = "{\"network\":\"resnet32\"}\nnot json\n\n{\"network\":\"resnet18\"}\n";
         let mut out = Vec::new();
@@ -181,9 +675,39 @@ mod tests {
         assert_eq!(stats.errors, 1);
         let lines: Vec<&str> = std::str::from_utf8(&out).unwrap().lines().collect();
         assert_eq!(lines.len(), 3);
-        assert!(lines[1].contains("error"));
         assert!(Json::parse(lines[0]).unwrap().get("layers").is_some());
         assert!(Json::parse(lines[2]).unwrap().get("layers").is_some());
+        // The error line is structured, with the legacy string alongside.
+        let err = Json::parse(lines[1]).unwrap();
+        let obj = err.get("error").unwrap();
+        assert_eq!(obj.get("kind").unwrap().as_str(), Some("parse"));
+        assert_eq!(
+            err.get("message").unwrap().as_str(),
+            obj.get("message").unwrap().as_str()
+        );
+    }
+
+    #[test]
+    fn error_kinds_cover_the_failure_paths() {
+        let kind = |line: &str| {
+            let reply = handle_line(line, None);
+            assert!(reply.failed);
+            Json::parse(&reply.line)
+                .unwrap()
+                .get("error")
+                .unwrap()
+                .get("kind")
+                .unwrap()
+                .as_str()
+                .unwrap()
+                .to_string()
+        };
+        assert_eq!(kind("not json"), "parse");
+        assert_eq!(kind("[1,2]"), "invalid");
+        assert_eq!(kind(r#"{"type":"frobnicate"}"#), "invalid");
+        assert_eq!(kind(r#"{"network":"not_a_net"}"#), "invalid");
+        assert_eq!(kind(r#"{"type":"__panic"}"#), "panic");
+        assert_eq!(kind(r#"{"v":2}"#), "invalid");
     }
 
     #[test]
@@ -196,19 +720,150 @@ mod tests {
 
     #[test]
     fn request_type_labels_cover_dispatch() {
-        assert_eq!(handle_request_labeled("not json").0, "invalid");
-        assert_eq!(handle_request_labeled("[1,2]").0, "invalid");
-        assert_eq!(handle_request_labeled(r#"{"type":3}"#).0, "invalid");
-        assert_eq!(handle_request_labeled(r#"{"type":"nope"}"#).0, "unknown");
+        assert_eq!(handle_line("not json", None).ty, "invalid");
+        assert_eq!(handle_line("[1,2]", None).ty, "invalid");
+        assert_eq!(handle_line(r#"{"type":3}"#, None).ty, "invalid");
+        assert_eq!(handle_line(r#"{"type":"nope"}"#, None).ty, "unknown");
+        assert_eq!(handle_line(r#"{"network":"resnet32"}"#, None).ty, "advisor");
+        assert_eq!(handle_line(r#"{"type":"train"}"#, None).ty, "train");
+        assert_eq!(handle_line(r#"{"type":"check","n":64}"#, None).ty, "check");
+        assert_eq!(handle_line(r#"{"type":"__panic"}"#, None).ty, "test");
+    }
+
+    #[test]
+    fn id_is_echoed_in_replies_and_errors() {
+        let ok = handle_request(r#"{"network":"resnet32","id":"req-7"}"#).unwrap();
+        assert_eq!(ok.get("id").unwrap().as_str(), Some("req-7"));
+        // Non-string ids echo verbatim too.
+        let reply = handle_line(r#"{"type":"frobnicate","id":42}"#, None);
         assert_eq!(
-            handle_request_labeled(r#"{"network":"resnet32"}"#).0,
-            "advisor"
+            Json::parse(&reply.line).unwrap().get("id").unwrap().as_f64(),
+            Some(42.0)
         );
-        assert_eq!(handle_request_labeled(r#"{"type":"train"}"#).0, "train");
+        // A bad envelope version still correlates by id.
+        let reply = handle_line(r#"{"v":9,"id":"v-check"}"#, None);
+        let err = Json::parse(&reply.line).unwrap();
+        assert_eq!(err.get("id").unwrap().as_str(), Some("v-check"));
+        assert!(err.get("message").unwrap().as_str().unwrap().contains("v1"));
+    }
+
+    #[test]
+    fn envelope_version_one_is_accepted() {
+        let out = handle_request(r#"{"v":1,"network":"resnet32"}"#).unwrap();
+        assert_eq!(out.get("type").unwrap().as_str(), Some("advisor_report"));
+        assert!(handle_request(r#"{"v":2,"network":"resnet32"}"#).is_err());
+        // null v means v1 as well.
+        assert!(handle_request(r#"{"v":null,"network":"resnet32"}"#).is_ok());
+    }
+
+    #[test]
+    fn panic_is_isolated_and_counted() {
+        let input = "{\"network\":\"resnet32\"}\n{\"type\":\"__panic\"}\n{\"network\":\"alexnet\"}\n";
+        let mut out = Vec::new();
+        let stats = serve(input.as_bytes(), &mut out).unwrap();
+        assert_eq!(stats.requests, 3);
+        assert_eq!(stats.errors, 1);
+        assert_eq!(stats.panics, 1);
+        assert_eq!(stats.timeouts, 0);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let err = Json::parse(lines[1]).unwrap();
+        assert_eq!(
+            err.get("error").unwrap().get("kind").unwrap().as_str(),
+            Some("panic")
+        );
+        assert!(err
+            .get("message")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("injected panic"));
+    }
+
+    #[test]
+    fn concurrent_output_matches_sequential() {
+        let mut input = String::new();
+        for i in 0..4 {
+            let net = ["resnet32", "resnet18", "alexnet"][i % 3];
+            input.push_str(&format!(
+                "{{\"type\":\"advisor\",\"network\":\"{net}\",\"id\":{i}}}\n"
+            ));
+        }
+        input.push_str("{\"type\":\"check\",\"n\":1000,\"m_acc\":9}\n");
+        input.push_str("not json\n");
+        input.push_str("{\"type\":\"frobnicate\",\"id\":\"x\"}\n");
+        input.push_str("{\"type\":\"__panic\"}\n");
+
+        let mut seq_out = Vec::new();
+        let seq_stats = serve_with(
+            input.as_bytes(),
+            &mut seq_out,
+            &ServeOptions {
+                workers: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut con_out = Vec::new();
+        let con_stats = serve_with(
+            input.as_bytes(),
+            &mut con_out,
+            &ServeOptions {
+                workers: 4,
+                queue_depth: 2,
+                timeout_ms: None,
+            },
+        )
+        .unwrap();
+        assert_eq!(seq_out, con_out, "pipeline output must be byte-identical");
+        assert_eq!(seq_stats, con_stats);
+        assert_eq!(con_stats.requests, 8);
+        assert_eq!(con_stats.errors, 3);
+        assert_eq!(con_stats.panics, 1);
+    }
+
+    #[test]
+    fn timeout_degrades_to_structured_error() {
+        let input = "{\"type\":\"__sleep\",\"ms\":5000,\"id\":\"slow\"}\n";
+        let mut out = Vec::new();
+        let stats = serve_with(
+            input.as_bytes(),
+            &mut out,
+            &ServeOptions {
+                workers: 1,
+                queue_depth: 8,
+                timeout_ms: Some(20),
+            },
+        )
+        .unwrap();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.errors, 1);
+        assert_eq!(stats.timeouts, 1);
+        let err = Json::parse(String::from_utf8(out).unwrap().lines().next().unwrap()).unwrap();
+        assert_eq!(
+            err.get("error").unwrap().get("kind").unwrap().as_str(),
+            Some("timeout")
+        );
+        assert_eq!(err.get("id").unwrap().as_str(), Some("slow"));
+    }
+
+    #[test]
+    fn gate_bounds_and_closes() {
+        let g = Gate::new(2);
+        g.acquire();
+        g.acquire();
+        // Full: a third acquire would block — release first, then retake.
+        g.release();
+        g.acquire();
+        // Close unblocks everyone; acquires become no-ops.
+        g.close();
+        g.acquire();
+        g.acquire();
     }
 
     /// Satellite requirement: each response line reaches the consumer as
-    /// soon as it is written (flush after every line).
+    /// soon as it is written (flush after every line), on both paths.
     #[test]
     fn output_is_flushed_per_line() {
         struct CountingWriter {
@@ -226,14 +881,24 @@ mod tests {
             }
         }
         let input = "{\"network\":\"resnet32\"}\nbad\n{\"network\":\"alexnet\"}\n";
-        let mut w = CountingWriter {
-            flushes: 0,
-            buf: Vec::new(),
-        };
-        let stats = serve(input.as_bytes(), &mut w).unwrap();
-        assert_eq!(stats.requests, 3);
-        // One flush per response line, error lines included.
-        assert!(w.flushes >= 3, "flushes={}", w.flushes);
-        assert_eq!(String::from_utf8(w.buf).unwrap().lines().count(), 3);
+        for workers in [1usize, 3] {
+            let mut w = CountingWriter {
+                flushes: 0,
+                buf: Vec::new(),
+            };
+            let stats = serve_with(
+                input.as_bytes(),
+                &mut w,
+                &ServeOptions {
+                    workers,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            assert_eq!(stats.requests, 3);
+            // One flush per response line, error lines included.
+            assert!(w.flushes >= 3, "workers={workers} flushes={}", w.flushes);
+            assert_eq!(String::from_utf8(w.buf).unwrap().lines().count(), 3);
+        }
     }
 }

@@ -9,6 +9,7 @@
 use anyhow::{bail, ensure, Context, Result};
 
 use super::cache;
+use super::error::ApiError;
 use super::policy::PrecisionPolicy;
 use crate::data::synth::{generate, Dataset, SynthSpec};
 use crate::trainer::metrics::RunMetrics;
@@ -255,6 +256,29 @@ impl ResolvedTrain {
     /// [`ResolvedTrain::run`] on caller-provided train/test splits (for
     /// sweeps that share one deterministic dataset across arms).
     pub fn run_on(&self, train: &Dataset, test: &Dataset) -> TrainReport {
+        self.run_on_with_deadline(train, test, None)
+            .expect("deadline-free run cannot time out")
+    }
+
+    /// [`ResolvedTrain::run`] under an optional cooperative deadline (the
+    /// serve `--timeout-ms` path). The step loop checks the deadline
+    /// between steps; once passed, the run stops and this returns a
+    /// timeout [`ApiError`] instead of a report.
+    pub fn run_with_deadline(
+        &self,
+        deadline: Option<std::time::Instant>,
+    ) -> Result<TrainReport, ApiError> {
+        let (train, test) = generate(&self.req.dataset_spec());
+        self.run_on_with_deadline(&train, &test, deadline)
+    }
+
+    /// [`ResolvedTrain::run_with_deadline`] on caller-provided splits.
+    pub fn run_on_with_deadline(
+        &self,
+        train: &Dataset,
+        test: &Dataset,
+        deadline: Option<std::time::Instant>,
+    ) -> Result<TrainReport, ApiError> {
         let _span = if crate::telemetry::enabled() {
             crate::telemetry::counter("abws_train_runs_total").inc();
             crate::telemetry::Span::enter(crate::telemetry::histogram("abws_train_run_wall_ns"))
@@ -267,16 +291,24 @@ impl ResolvedTrain {
             steps: r.steps,
             batch: r.batch,
             seed: r.seed,
+            deadline,
             ..Default::default()
         };
         let mut trainer = NativeTrainer::new(r.dim, r.classes, self.plan, cfg);
         let metrics = trainer.train(train);
+        if metrics.deadline_exceeded {
+            return Err(ApiError::timeout(format!(
+                "train request exceeded its deadline after {} of {} steps",
+                metrics.steps.len(),
+                r.steps
+            )));
+        }
         let test_acc = trainer.evaluate(test);
-        TrainReport {
+        Ok(TrainReport {
             widths: self.widths,
             metrics,
             test_acc,
-        }
+        })
     }
 }
 
@@ -373,6 +405,19 @@ mod tests {
         let j = report.to_json();
         assert_eq!(j.get("steps_run").unwrap().as_f64(), Some(25.0));
         assert!(j.get("loss_curve").unwrap().as_arr().unwrap().len() == 25);
+    }
+
+    #[test]
+    fn expired_deadline_yields_timeout_error() {
+        let mut req = tiny();
+        req.plan = PlanSpec::Uniform { m_acc: 12 };
+        let resolved = req.resolve().unwrap();
+        let past = std::time::Instant::now() - std::time::Duration::from_millis(1);
+        let err = resolved.run_with_deadline(Some(past)).unwrap_err();
+        assert_eq!(err.kind, crate::api::error::ErrorKind::Timeout);
+        assert!(err.message.contains("deadline"));
+        // No deadline at all still succeeds on the same resolved plan.
+        assert!(resolved.run_with_deadline(None).is_ok());
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! abws mc [--n 16384] [--maccs 5,6,8] [--trials 256] [--chunk 64]
 //! abws train [--mode native|aot] [--macc 12 | --pp -1] [--chunk 64]
 //!            [--steps 300] [--dim 256] [--hidden 64] [--seed 42]
-//! abws serve [--telemetry]
+//! abws serve [--workers N] [--queue-depth N] [--timeout-ms N] [--telemetry]
 //! abws metrics [--format table|json|prom] [--no-demo]
 //! abws list
 //! abws info
@@ -61,8 +61,11 @@ const USAGE: &str = "usage: abws <predict|vrr|area|mc|train|serve|metrics|list|i
   area     — Fig 1b: FPU area model ladder
   mc       — Monte-Carlo validation of the VRR formulas
   train    — reduced-precision training run (native bit-accurate or AOT/PJRT)
-  serve    — batch mode: NDJSON advisor/train requests on stdin -> reports on stdout
-             (--telemetry prints a final JSON metrics snapshot to stderr)
+  serve    — batch mode: NDJSON advisor/train/check requests on stdin -> reports on stdout
+             (--workers N pools request execution, 0 = one per core; replies stay
+              in input order. --queue-depth N bounds read-ahead (default 128).
+              --timeout-ms N gives every request a deadline.
+              --telemetry prints a final JSON metrics snapshot to stderr)
   metrics  — exercise the stack and print the telemetry snapshot
              (--format table|json|prom; --no-demo to skip the workload)
   list     — catalog of reproducible experiments
@@ -84,9 +87,10 @@ fn parse_chunk(args: &Args) -> Result<Option<usize>> {
 }
 
 fn cmd_predict(args: &Args) -> Result<()> {
-    let policy = PrecisionPolicy::paper()
-        .with_m_p(args.get_u32("mp", 5))
-        .with_chunk(Some(parse_chunk(args)?.unwrap_or(64)));
+    let policy = PrecisionPolicy::builder()
+        .m_p(args.get_u32("mp", 5))
+        .chunk(parse_chunk(args)?.unwrap_or(64))
+        .build()?;
     for report in api::advise_builtin(args.get_or("net", "all"), &policy)? {
         println!("{}", report.render());
         if args.flag("detail") {
@@ -103,12 +107,17 @@ fn cmd_predict(args: &Args) -> Result<()> {
 
 fn cmd_vrr(args: &Args) -> Result<()> {
     let m_acc = args.get_u32("macc", 12);
+    ensure!(
+        (1..=52).contains(&m_acc),
+        "--macc must be in 1..=52, got {m_acc}"
+    );
     let n = args.get_usize("n", 4096);
     let nzr = args.get_f64("nzr", 1.0);
-    let policy = PrecisionPolicy::paper()
-        .with_m_p(args.get_u32("mp", 5))
-        .with_chunk(parse_chunk(args)?);
-    let spec = policy.accum_spec(n, nzr);
+    let policy = PrecisionPolicy::builder()
+        .m_p(args.get_u32("mp", 5))
+        .maybe_chunk(parse_chunk(args)?)
+        .build()?;
+    let spec = policy.checked_accum_spec(n, nzr)?;
     let v = api::cache::vrr(&spec, m_acc);
     let log_v = vrr::variance_lost::log_variance_lost(v, spec.n_eff());
     println!(
@@ -167,7 +176,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
     };
     let req = TrainRequest {
-        policy: PrecisionPolicy::paper().with_chunk(parse_chunk(args)?),
+        policy: PrecisionPolicy::builder()
+            .maybe_chunk(parse_chunk(args)?)
+            .build()?,
         plan,
         dim: args.get_usize("dim", 256),
         hidden: args.get_usize("hidden", 64),
@@ -259,13 +270,56 @@ fn report_run(m: &crate::trainer::RunMetrics, test_acc: f64, steps: usize) {
     println!("test-acc {test_acc:.4}  diverged: {}", m.diverged);
 }
 
+/// Parse an optional integer flag with a usable error (the panicking
+/// `Args::get_usize` is wrong for user-facing serve flags).
+fn parse_count(args: &Args, name: &str) -> Result<Option<u64>> {
+    match args.get(name) {
+        None => Ok(None),
+        Some(s) => s.parse().map(Some).map_err(|_| {
+            anyhow!("--{name} expects a non-negative integer, got '{s}' (e.g. --{name} 4)")
+        }),
+    }
+}
+
+/// Assemble [`api::ServeOptions`] from serve's command-line flags.
+fn serve_options(args: &Args) -> Result<api::ServeOptions> {
+    let workers = match parse_count(args, "workers")? {
+        // 0 is an explicit "one per core" request.
+        Some(0) => api::default_workers(),
+        Some(w) => w as usize,
+        None => 1,
+    };
+    let queue_depth = match parse_count(args, "queue-depth")? {
+        Some(q) => {
+            ensure!(q >= 1, "--queue-depth must be at least 1");
+            q as usize
+        }
+        None => 128,
+    };
+    let timeout_ms = match parse_count(args, "timeout-ms")? {
+        Some(t) => {
+            ensure!(t >= 1, "--timeout-ms must be at least 1");
+            Some(t)
+        }
+        None => None,
+    };
+    Ok(api::ServeOptions {
+        workers,
+        queue_depth,
+        timeout_ms,
+    })
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
-    let stdin = std::io::stdin();
+    let opts = serve_options(args)?;
     let stdout = std::io::stdout();
-    let stats = api::serve(stdin.lock(), stdout.lock())?;
+    // `StdinLock` is not `Send` (the reader thread needs to own its
+    // input), so wrap the unlocked handle in our own buffer.
+    let input = std::io::BufReader::new(std::io::stdin());
+    let stats = api::serve_with(input, stdout.lock(), &opts)?;
     eprintln!(
-        "served {} request(s), {} error(s)",
-        stats.requests, stats.errors
+        "served {} request(s), {} error(s) ({} timeout(s), {} panic(s))",
+        stats.requests, stats.errors, stats.timeouts, stats.panics
     );
     // One JSON line to stderr so it never interleaves with the NDJSON
     // report stream on stdout.
@@ -350,6 +404,50 @@ mod tests {
         assert!(msg.contains("--chunk"), "{msg}");
         assert!(msg.contains("banana"), "{msg}");
         assert!(parse_chunk(&args(&["--chunk", "0"])).is_err());
+    }
+
+    #[test]
+    fn serve_flags_parse_or_error_cleanly() {
+        let o = serve_options(&args(&["serve"])).unwrap();
+        assert_eq!(o.workers, 1);
+        assert_eq!(o.queue_depth, 128);
+        assert_eq!(o.timeout_ms, None);
+
+        let o = serve_options(&args(&[
+            "serve",
+            "--workers",
+            "4",
+            "--queue-depth",
+            "16",
+            "--timeout-ms",
+            "250",
+        ]))
+        .unwrap();
+        assert_eq!(o.workers, 4);
+        assert_eq!(o.queue_depth, 16);
+        assert_eq!(o.timeout_ms, Some(250));
+
+        // --workers 0 means one per core.
+        let o = serve_options(&args(&["serve", "--workers", "0"])).unwrap();
+        assert!(o.workers >= 1);
+
+        for bad in [
+            ["serve", "--workers", "four"],
+            ["serve", "--queue-depth", "0"],
+            ["serve", "--timeout-ms", "0"],
+            ["serve", "--timeout-ms", "-5"],
+        ] {
+            let e = serve_options(&args(&bad)).unwrap_err();
+            assert!(format!("{e:#}").contains("--"), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn vrr_rejects_out_of_range_macc_and_chunk() {
+        assert!(cmd_vrr(&args(&["vrr", "--macc", "0"])).is_err());
+        assert!(cmd_vrr(&args(&["vrr", "--macc", "53"])).is_err());
+        // chunk larger than n is rejected by checked_accum_spec.
+        assert!(cmd_vrr(&args(&["vrr", "--n", "32", "--chunk", "64"])).is_err());
     }
 
     #[test]

@@ -13,8 +13,16 @@ pub struct SweepPoint<P> {
     pub params: P,
 }
 
-/// Run `f` over `points` with up to `threads` workers; results come back
-/// in input order. Panics in workers are propagated.
+/// The default worker count for pooled work: one per available core
+/// (1 if the parallelism query fails). Shared by [`run_sweep`] and the
+/// `api::serve` worker pool.
+pub fn default_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f` over `points` with up to `threads` workers (0 = one per
+/// available core); results come back in input order. Panics in workers
+/// are propagated.
 pub fn run_sweep<P, R, F>(points: Vec<P>, threads: usize, f: F) -> Vec<R>
 where
     P: Send + Sync,
@@ -25,6 +33,7 @@ where
     if n == 0 {
         return Vec::new();
     }
+    let threads = if threads == 0 { default_threads() } else { threads };
     let threads = threads.clamp(1, n);
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
@@ -84,6 +93,12 @@ mod tests {
     #[test]
     fn more_threads_than_points() {
         assert_eq!(run_sweep(vec![5], 64, |&p| p), vec![5]);
+    }
+
+    #[test]
+    fn zero_threads_means_default() {
+        assert!(default_threads() >= 1);
+        assert_eq!(run_sweep(vec![1, 2, 3], 0, |&p| p + 1), vec![2, 3, 4]);
     }
 
     #[test]

@@ -125,6 +125,13 @@ impl Histogram {
         self.buckets[bucket_index(value)].fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a [`std::time::Duration`] as nanoseconds (saturating past
+    /// `u64::MAX` ns ≈ 584 years).
+    #[inline]
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
@@ -260,6 +267,15 @@ mod tests {
         assert!((512.0..=2048.0).contains(&p99), "p99={p99}");
         assert!(p999 > 500_000.0, "p99.9={p999}");
         assert!(s.quantile(0.0) <= p50);
+    }
+
+    #[test]
+    fn record_duration_is_nanoseconds() {
+        let h = Histogram::new();
+        h.record_duration(std::time::Duration::from_micros(3));
+        let s = h.snapshot();
+        assert_eq!(s.count, 1);
+        assert_eq!(s.sum, 3_000);
     }
 
     #[test]

@@ -19,6 +19,9 @@ pub struct RunMetrics {
     pub diverged: bool,
     /// Step at which divergence was first detected.
     pub diverged_at: Option<usize>,
+    /// The run stopped early because its cooperative deadline passed
+    /// (`TrainConfig::deadline`).
+    pub deadline_exceeded: bool,
 }
 
 impl RunMetrics {
@@ -69,6 +72,9 @@ impl RunMetrics {
         j.set("diverged", self.diverged);
         if let Some(s) = self.diverged_at {
             j.set("diverged_at", s);
+        }
+        if self.deadline_exceeded {
+            j.set("deadline_exceeded", true);
         }
         if let Some(a) = self.test_acc {
             j.set("test_acc", a);

@@ -76,6 +76,10 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Record metrics every `log_every` steps (1 = every step).
     pub log_every: usize,
+    /// Cooperative deadline: the step loop checks before each step and
+    /// stops (flagging `RunMetrics::deadline_exceeded`) once passed.
+    /// `None` (the default) never stops early.
+    pub deadline: Option<std::time::Instant>,
 }
 
 impl Default for TrainConfig {
@@ -91,6 +95,7 @@ impl Default for TrainConfig {
             },
             seed: 42,
             log_every: 1,
+            deadline: None,
         }
     }
 }
@@ -177,6 +182,12 @@ impl NativeTrainer {
         });
         let mut metrics = RunMetrics::default();
         for step in 0..self.cfg.steps {
+            if let Some(d) = self.cfg.deadline {
+                if std::time::Instant::now() >= d {
+                    metrics.deadline_exceeded = true;
+                    break;
+                }
+            }
             let (xb, yb) = data.batch(step, self.cfg.batch);
             let timer = tel.as_ref().map(|_| crate::telemetry::Timer::start());
             let (loss, acc) = self.step(&xb, &yb);
@@ -292,6 +303,22 @@ mod tests {
             m.tail_loss(20),
             mb.tail_loss(20)
         );
+    }
+
+    #[test]
+    fn expired_deadline_stops_before_the_first_step() {
+        let (train, _) = small_data();
+        let cfg = TrainConfig {
+            steps: 50,
+            hidden: 16,
+            deadline: Some(std::time::Instant::now() - std::time::Duration::from_millis(1)),
+            ..Default::default()
+        };
+        let mut t = NativeTrainer::new(32, 4, PrecisionPlan::baseline(), cfg);
+        let m = t.train(&train);
+        assert!(m.deadline_exceeded);
+        assert!(m.steps.is_empty());
+        assert!(m.to_json().get("deadline_exceeded").unwrap().as_bool().unwrap());
     }
 
     #[test]

@@ -241,5 +241,39 @@ fn serve_mixes_advisor_and_train_and_survives_errors() {
     assert_eq!(trained.get("type").unwrap().as_str(), Some("train_report"));
     assert_eq!(trained.get("m_fwd").unwrap().as_f64(), Some(10.0));
     assert_eq!(trained.get("steps_run").unwrap().as_f64(), Some(5.0));
-    assert!(Json::parse(lines[2]).unwrap().get("error").is_some());
+    let bad = Json::parse(lines[2]).unwrap();
+    let err = bad.get("error").expect("unknown network yields an error object");
+    assert_eq!(err.get("kind").unwrap().as_str(), Some("invalid"));
+    // Deprecated top-level string mirrors the structured message for one
+    // release (see docs/serve.md).
+    assert_eq!(bad.get("message").unwrap().as_str(), err.get("message").unwrap().as_str());
+}
+
+/// A `check` request through `serve` agrees with asking the solver
+/// directly, and a builder-assembled policy drives both.
+#[test]
+fn serve_check_requests_agree_with_the_direct_solver() {
+    let policy = PrecisionPolicy::builder()
+        .m_p(5)
+        .chunk(64)
+        .build()
+        .unwrap();
+    let n = 4_096usize;
+    let direct = min_m_acc(&policy.accum_spec(n, 1.0));
+
+    let input = format!(
+        "{{\"type\":\"check\",\"policy\":{},\"n\":{n},\"m_acc\":{direct},\"id\":\"q\"}}\n",
+        policy.to_json()
+    );
+    let mut out = Vec::new();
+    let stats = serve(input.as_bytes(), &mut out).unwrap();
+    assert_eq!(stats.requests, 1);
+    assert_eq!(stats.errors, 0);
+
+    let report = Json::parse(String::from_utf8(out).unwrap().trim()).unwrap();
+    assert_eq!(report.get("type").unwrap().as_str(), Some("check_report"));
+    assert_eq!(report.get("min_m_acc").unwrap().as_f64(), Some(direct as f64));
+    // The proposed width equals the minimum, so it must be suitable.
+    assert_eq!(report.get("suitable").unwrap().as_bool(), Some(true));
+    assert_eq!(report.get("id").unwrap().as_str(), Some("q"));
 }

@@ -1,0 +1,254 @@
+//! Integration tests for the pooled `abws::api::serve_with` pipeline:
+//! ordered replies, byte-identity with sequential mode, panic isolation,
+//! per-request deadlines, and the v1 request envelope.
+//!
+//! These run in their own test binary (own process, own telemetry
+//! registry), but the tests within it still share that registry across
+//! threads — telemetry assertions therefore use before/after deltas
+//! with `>=` semantics, never exact global equality. Per-call
+//! `ServeStats` are exact.
+
+use abws::api::{serve_with, ServeOptions, ServeStats};
+use abws::telemetry;
+use abws::util::json::Json;
+
+fn run(input: &str, opts: &ServeOptions) -> (String, ServeStats) {
+    let mut out = Vec::new();
+    let stats = serve_with(input.as_bytes(), &mut out, opts).unwrap();
+    (String::from_utf8(out).unwrap(), stats)
+}
+
+fn opts(workers: usize) -> ServeOptions {
+    ServeOptions {
+        workers,
+        ..ServeOptions::default()
+    }
+}
+
+/// A deterministic 1000-line mixed batch: advisors cycling the builtin
+/// networks, pointwise checks, tiny seeded training runs, plus planted
+/// parse errors and unknown request types.
+fn mixed_batch() -> (String, usize) {
+    let mut input = String::new();
+    let mut errors = 0;
+    for i in 0..1000usize {
+        let line = if i % 100 == 7 {
+            errors += 1;
+            format!("this is not json (line {i})\n")
+        } else if i % 100 == 57 {
+            errors += 1;
+            format!("{{\"type\":\"frobnicate\",\"id\":{i}}}\n")
+        } else if i % 100 == 31 {
+            format!(
+                "{{\"type\":\"train\",\"plan\":{{\"kind\":\"baseline\"}},\
+                 \"dim\":8,\"classes\":2,\"hidden\":8,\"steps\":3,\"batch\":4,\
+                 \"n_train\":32,\"n_test\":16,\"seed\":{i},\"id\":{i}}}\n"
+            )
+        } else if i % 10 == 3 {
+            let n = 256 << (i % 4);
+            format!("{{\"type\":\"check\",\"n\":{n},\"m_acc\":9,\"id\":{i}}}\n")
+        } else {
+            let net = ["resnet32", "resnet18", "alexnet"][i % 3];
+            let id = if i % 2 == 0 {
+                format!(",\"id\":{i}")
+            } else {
+                String::new()
+            };
+            format!("{{\"type\":\"advisor\",\"network\":\"{net}\"{id}}}\n")
+        };
+        input.push_str(&line);
+    }
+    (input, errors)
+}
+
+/// Acceptance criterion: a 1000-request mixed batch through the pooled
+/// pipeline at `--workers 4` is byte-identical to sequential mode, with
+/// exactly one reply line per request.
+#[test]
+fn mixed_batch_of_1000_is_byte_identical_across_worker_counts() {
+    let (input, planted_errors) = mixed_batch();
+
+    let pooled = ServeOptions {
+        workers: 4,
+        queue_depth: 64,
+        timeout_ms: None,
+    };
+    let (out4, stats4) = run(&input, &pooled);
+    let (out1, stats1) = run(&input, &opts(1));
+
+    assert_eq!(out4, out1, "pooled output diverged from sequential");
+    assert_eq!(stats4, stats1);
+    assert_eq!(stats4.requests, 1000);
+    assert_eq!(stats4.errors, planted_errors);
+    assert_eq!(stats4.timeouts, 0);
+    assert_eq!(stats4.panics, 0);
+    assert_eq!(out4.lines().count(), 1000, "one reply line per request");
+
+    // Spot-check id echo survives the pooled path on every reply kind.
+    for (i, line) in out4.lines().enumerate() {
+        let j = Json::parse(line).unwrap();
+        let expects_id = i % 100 == 57 || i % 100 == 31 || i % 10 == 3 || i % 2 == 0;
+        if i % 100 == 7 {
+            // Parse errors have no id to echo.
+            assert!(j.get("id").is_none(), "line {i} invented an id");
+        } else if expects_id {
+            assert_eq!(j.get("id").and_then(Json::as_f64), Some(i as f64), "line {i}");
+        }
+    }
+}
+
+/// A slow first request must not let fast later requests overtake it in
+/// the output: replies come back in input-line order, and the telemetry
+/// queue-wait/request counters reconcile with the batch.
+#[test]
+fn replies_stay_in_input_order_despite_out_of_order_completion() {
+    let mut input = String::from("{\"type\":\"__sleep\",\"ms\":150,\"id\":\"slow\"}\n");
+    let fast = 12usize;
+    for i in 0..fast {
+        let net = ["resnet32", "resnet18", "alexnet"][i % 3];
+        input.push_str(&format!(
+            "{{\"type\":\"advisor\",\"network\":\"{net}\",\"id\":{i}}}\n"
+        ));
+    }
+
+    let before = telemetry::snapshot();
+    let (out, stats) = run(&input, &opts(4));
+    let delta = telemetry::snapshot().diff(&before);
+
+    assert_eq!(stats.requests, fast + 1);
+    assert_eq!(stats.errors, 0);
+
+    let lines: Vec<&str> = out.lines().collect();
+    assert_eq!(lines.len(), fast + 1);
+    let first = Json::parse(lines[0]).unwrap();
+    assert_eq!(first.get("id").and_then(Json::as_str), Some("slow"));
+    assert_eq!(
+        first.get("type").and_then(Json::as_str),
+        Some("__sleep_report"),
+        "slow request must still answer first"
+    );
+    for (i, line) in lines[1..].iter().enumerate() {
+        let j = Json::parse(line).unwrap();
+        assert_eq!(j.get("id").and_then(Json::as_f64), Some(i as f64), "line {i}");
+    }
+
+    // Telemetry reconciles: every request was counted by type and waited
+    // in the queue at least once (>=: other tests share the registry).
+    let c = |name: &str| delta.counters.get(name).copied().unwrap_or(0);
+    assert!(c("abws_serve_requests_total{type=\"advisor\"}") >= fast as u64);
+    assert!(c("abws_serve_requests_total{type=\"test\"}") >= 1);
+    let wait = &delta.histograms["abws_serve_queue_wait_ns"];
+    assert!(wait.count >= (fast + 1) as u64, "queue waits {}", wait.count);
+    assert!(
+        delta.histograms.contains_key("abws_serve_worker_utilization_pct"),
+        "worker utilization histogram missing"
+    );
+}
+
+/// A panicking handler poisons only its own line: every other request
+/// still answers, the panic slot carries a structured `panic` error, and
+/// the reply count stays exact.
+#[test]
+fn panic_is_isolated_to_its_own_reply_line() {
+    let input = "{\"type\":\"advisor\",\"network\":\"resnet32\",\"id\":0}\n\
+                 {\"type\":\"advisor\",\"network\":\"resnet18\",\"id\":1}\n\
+                 {\"type\":\"__panic\",\"id\":7}\n\
+                 {\"type\":\"check\",\"n\":1024,\"id\":3}\n\
+                 {\"type\":\"advisor\",\"network\":\"alexnet\",\"id\":4}\n";
+
+    let (out, stats) = run(input, &opts(4));
+    assert_eq!(stats.requests, 5);
+    assert_eq!(stats.errors, 1);
+    assert_eq!(stats.panics, 1);
+
+    let lines: Vec<&str> = out.lines().collect();
+    assert_eq!(lines.len(), 5, "a panic must not eat its reply line");
+    let j = Json::parse(lines[2]).unwrap();
+    let err = j.get("error").expect("panic slot carries an error object");
+    assert_eq!(err.get("kind").and_then(Json::as_str), Some("panic"));
+    assert_eq!(j.get("id").and_then(Json::as_f64), Some(7.0));
+    // Deprecated legacy string mirrors the structured message.
+    assert_eq!(
+        j.get("message").and_then(Json::as_str),
+        err.get("message").and_then(Json::as_str)
+    );
+    for (i, line) in lines.iter().enumerate() {
+        if i != 2 {
+            let j = Json::parse(line).unwrap();
+            assert!(j.get("error").is_none(), "line {i} failed: {line}");
+        }
+    }
+}
+
+/// `--timeout-ms` degrades long requests — both the hidden sleep handler
+/// and a genuinely long training run via the trainer's cooperative
+/// deadline — to structured `timeout` error lines.
+#[test]
+fn deadline_degrades_to_structured_timeout_error() {
+    let input = "{\"type\":\"__sleep\",\"ms\":2000,\"id\":\"s\"}\n\
+                 {\"type\":\"train\",\"plan\":{\"kind\":\"baseline\"},\
+                  \"dim\":16,\"classes\":4,\"hidden\":32,\"steps\":100000,\
+                  \"batch\":8,\"n_train\":256,\"n_test\":32,\"id\":\"t\"}\n\
+                 {\"type\":\"check\",\"n\":512,\"id\":\"ok\"}\n";
+
+    let pooled = ServeOptions {
+        workers: 2,
+        queue_depth: 8,
+        timeout_ms: Some(25),
+    };
+    let (out, stats) = run(input, &pooled);
+    assert_eq!(stats.requests, 3);
+    assert_eq!(stats.timeouts, 2);
+    assert_eq!(stats.panics, 0);
+
+    let lines: Vec<&str> = out.lines().collect();
+    assert_eq!(lines.len(), 3);
+    for (line, id) in [(lines[0], "s"), (lines[1], "t")] {
+        let j = Json::parse(line).unwrap();
+        let err = j.get("error").expect("timed-out slot carries an error");
+        assert_eq!(err.get("kind").and_then(Json::as_str), Some("timeout"));
+        assert_eq!(j.get("id").and_then(Json::as_str), Some(id));
+    }
+    let ok = Json::parse(lines[2]).unwrap();
+    assert!(ok.get("error").is_none(), "fast request must not time out");
+    assert_eq!(ok.get("id").and_then(Json::as_str), Some("ok"));
+}
+
+/// The v1 envelope: missing `"v"` means v1, explicit `"v":1` is
+/// accepted, and an unknown version is a structured `invalid` error that
+/// still echoes the request id.
+#[test]
+fn envelope_versions_gate_requests() {
+    let input = "{\"v\":1,\"type\":\"check\",\"n\":100,\"id\":\"a\"}\n\
+                 {\"type\":\"check\",\"n\":100,\"id\":\"b\"}\n\
+                 {\"v\":2,\"type\":\"check\",\"n\":100,\"id\":\"c\"}\n";
+
+    let (out, stats) = run(input, &opts(2));
+    assert_eq!(stats.requests, 3);
+    assert_eq!(stats.errors, 1);
+
+    let lines: Vec<&str> = out.lines().collect();
+    let a = Json::parse(lines[0]).unwrap();
+    let b = Json::parse(lines[1]).unwrap();
+    assert!(a.get("error").is_none());
+    assert_eq!(a.get("min_m_acc"), b.get("min_m_acc"), "v1 == default");
+
+    let c = Json::parse(lines[2]).unwrap();
+    let err = c.get("error").unwrap();
+    assert_eq!(err.get("kind").and_then(Json::as_str), Some("invalid"));
+    assert_eq!(c.get("id").and_then(Json::as_str), Some("c"));
+    let msg = err.get("message").and_then(Json::as_str).unwrap();
+    assert!(msg.contains("v1"), "error should name the supported version: {msg}");
+}
+
+/// `workers: 0` resolves to the detected parallelism rather than a
+/// zero-thread deadlock.
+#[test]
+fn zero_workers_means_auto_detect() {
+    let input = "{\"type\":\"check\",\"n\":64,\"id\":1}\n";
+    let (out, stats) = run(input, &opts(0));
+    assert_eq!(stats.requests, 1);
+    assert_eq!(stats.errors, 0);
+    let j = Json::parse(out.lines().next().unwrap()).unwrap();
+    assert_eq!(j.get("id").and_then(Json::as_f64), Some(1.0));
+}
