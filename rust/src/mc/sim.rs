@@ -10,7 +10,7 @@ use std::thread;
 
 use crate::softfloat::accumulate::{chunked_sum, exact_sum, sequential_sum};
 use crate::softfloat::format::FpFormat;
-use crate::softfloat::quant::{quantize, Rounding};
+use crate::softfloat::quant::{Quantizer, Rounding};
 use crate::telemetry::{self, Timer};
 use crate::util::rng::Pcg64;
 use crate::util::stats::Welford;
@@ -94,6 +94,10 @@ pub fn empirical_vrr(cfg: &McConfig) -> McResult {
         telemetry::enabled().then(|| telemetry::histogram("abws_mc_worker_trials_per_sec"));
     let acc_fmt = FpFormat::new(cfg.e_acc, cfg.m_acc);
     let prod_fmt = FpFormat::new(6, cfg.m_p);
+    // Product-format constants hoisted out of the trial loop (the same
+    // precomputation the GEMM kernel does); bit-identical to the free
+    // `quantize` this replaced.
+    let prod_q = Quantizer::new(prod_fmt, Rounding::NearestEven);
     let threads = cfg.threads.max(1).min(cfg.trials.max(1));
     let per = cfg.trials.div_ceil(threads);
 
@@ -115,11 +119,7 @@ pub fn empirical_vrr(cfg: &McConfig) -> McResult {
                     // terms whichever worker runs it.
                     let mut rng = Pcg64::new(cfg.seed, trial as u64 + 1);
                     for p in terms.iter_mut() {
-                        *p = quantize(
-                            rng.normal() * cfg.sigma_p,
-                            prod_fmt,
-                            Rounding::NearestEven,
-                        );
+                        *p = prod_q.quantize(rng.normal() * cfg.sigma_p);
                     }
                     let reduced = match cfg.chunk {
                         Some(c) => chunked_sum(&terms, c, acc_fmt, Rounding::NearestEven),

@@ -9,15 +9,20 @@
 //! is always available. Builds without the feature still discover and
 //! verify artifact directories — they just cannot execute them, and the
 //! CLI reports that with a clear error instead of failing to link.
+//!
+//! [`pool`] is independent of PJRT: the persistent worker pool the
+//! softfloat GEMM kernel parallelizes over (always available).
 
 pub mod artifact;
 #[cfg(feature = "pjrt")]
 pub mod client;
 #[cfg(feature = "pjrt")]
 pub mod exec;
+pub mod pool;
 
 pub use artifact::ArtifactStore;
 #[cfg(feature = "pjrt")]
 pub use client::Runtime;
 #[cfg(feature = "pjrt")]
 pub use exec::TrainStepExecutor;
+pub use pool::WorkerPool;

@@ -1,0 +1,344 @@
+//! Persistent worker pool for data-parallel kernels.
+//!
+//! `std::thread::scope` (see `coordinator::sweep`) is fine for coarse
+//! sweeps, but the GEMM hot path enters a parallel region for every
+//! matrix product — respawning OS threads each time would swamp the work
+//! itself. This pool keeps plain `std::thread` workers alive across
+//! regions: a caller publishes one job, `threads - 1` pool workers claim
+//! it, the caller participates too, and everyone meets at a completion
+//! latch before the call returns.
+//!
+//! Design rules:
+//!
+//! 1. **The job splits its own work.** A region's job is a single
+//!    `Fn() + Sync` closure invoked once per participant; participants
+//!    coordinate through whatever the closure captures (typically an
+//!    atomic index over row panels). The pool knows nothing about the
+//!    work's shape.
+//! 2. **One region at a time; excess callers run alone.** The region
+//!    lock is acquired with `try_lock`: a caller that finds the pool busy
+//!    (a concurrent serve worker, or a nested region) just runs the job
+//!    on its own thread. Kernels built on this pool must therefore be
+//!    *participant-count independent* — which the reduced-precision GEMM
+//!    is by construction (every output element is an independent dot
+//!    product), so the fallback is always bit-identical.
+//! 3. **Panics do not poison the pool.** Workers run jobs under
+//!    `catch_unwind`; a worker panic is re-raised on the caller after the
+//!    latch, and the worker itself survives for the next region.
+//!
+//! The lifetime of the published closure is erased to `'static` while a
+//! region is open; this is sound because [`WorkerPool::run`] does not
+//! return (or unwind) until every participant has finished with it.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+use std::time::Instant;
+
+/// What a parallel region reports back: region wall time and per
+/// participant busy time (the caller first, pool workers after, in
+/// completion order).
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub wall_ns: u64,
+    pub busy_ns: Vec<u64>,
+}
+
+impl RunReport {
+    /// Busy share of the region wall clock per participant, in percent
+    /// (clamped to 100 — timer granularity can nudge a busy worker over).
+    pub fn utilization_pct(&self) -> impl Iterator<Item = u64> + '_ {
+        let wall = self.wall_ns.max(1);
+        self.busy_ns
+            .iter()
+            .map(move |&b| (b.saturating_mul(100) / wall).min(100))
+    }
+}
+
+type Job = &'static (dyn Fn() + Sync);
+
+struct State {
+    /// The open region's job; `None` between regions.
+    job: Option<Job>,
+    /// Bumped once per region so sleeping workers can tell a new job
+    /// from a spurious wakeup or an already-drained one.
+    epoch: u64,
+    /// Worker claims still available for the open region.
+    unclaimed: usize,
+    /// Claimed worker executions not yet finished (the latch count).
+    running: usize,
+    panicked: bool,
+    busy_ns: Vec<u64>,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Signals workers that a region opened.
+    work_cv: Condvar,
+    /// Signals the caller that the last claimed worker finished.
+    done_cv: Condvar,
+}
+
+/// A persistent pool of `std::thread` workers; see the module docs.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    /// Workers spawned so far (grown lazily, never shrunk).
+    spawned: Mutex<usize>,
+    /// Held for the duration of one parallel region.
+    region: Mutex<()>,
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    if st.unclaimed > 0 {
+                        st.unclaimed -= 1;
+                        break st.job.expect("open region with no job");
+                    }
+                    // Region already fully claimed — wait for the next.
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        let t0 = Instant::now();
+        let result = catch_unwind(AssertUnwindSafe(|| job()));
+        let busy = t0.elapsed().as_nanos() as u64;
+        let mut st = shared.state.lock().unwrap();
+        st.busy_ns.push(busy);
+        if result.is_err() {
+            st.panicked = true;
+        }
+        st.running -= 1;
+        if st.running == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+impl WorkerPool {
+    fn new() -> WorkerPool {
+        WorkerPool {
+            shared: Arc::new(Shared {
+                state: Mutex::new(State {
+                    job: None,
+                    epoch: 0,
+                    unclaimed: 0,
+                    running: 0,
+                    panicked: false,
+                    busy_ns: Vec::new(),
+                }),
+                work_cv: Condvar::new(),
+                done_cv: Condvar::new(),
+            }),
+            spawned: Mutex::new(0),
+            region: Mutex::new(()),
+        }
+    }
+
+    fn ensure_workers(&self, want: usize) {
+        let mut n = self.spawned.lock().unwrap();
+        while *n < want {
+            let shared = Arc::clone(&self.shared);
+            thread::Builder::new()
+                .name(format!("abws-pool-{n}"))
+                .spawn(move || worker_loop(shared))
+                .expect("failed to spawn pool worker");
+            *n += 1;
+        }
+    }
+
+    /// Run `f` once on each of `threads` participants: the calling thread
+    /// plus `threads - 1` pool workers. Blocks until every participant
+    /// has returned. If `threads <= 1`, or another region is already
+    /// open, the caller runs `f` alone (see the module docs for why that
+    /// must be equivalent).
+    pub fn run(&self, threads: usize, f: &(dyn Fn() + Sync)) -> RunReport {
+        let region = if threads > 1 {
+            self.region.try_lock().ok()
+        } else {
+            None
+        };
+        let Some(_region) = region else {
+            let t0 = Instant::now();
+            f();
+            let ns = t0.elapsed().as_nanos() as u64;
+            return RunReport {
+                wall_ns: ns.max(1),
+                busy_ns: vec![ns],
+            };
+        };
+
+        let helpers = threads - 1;
+        self.ensure_workers(helpers);
+        // Erase the borrow lifetime for the worker threads. Sound: this
+        // function waits on the completion latch below before returning
+        // or unwinding, so no worker can still hold the reference once
+        // the caller's borrow of `f` ends.
+        let job: Job =
+            unsafe { std::mem::transmute::<&(dyn Fn() + Sync), &'static (dyn Fn() + Sync)>(f) };
+
+        let wall = Instant::now();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(job);
+            st.epoch = st.epoch.wrapping_add(1);
+            st.unclaimed = helpers;
+            st.running = helpers;
+            st.panicked = false;
+            st.busy_ns.clear();
+        }
+        self.shared.work_cv.notify_all();
+
+        let t0 = Instant::now();
+        let caller = catch_unwind(AssertUnwindSafe(|| f()));
+        let caller_busy = t0.elapsed().as_nanos() as u64;
+
+        let (worker_panicked, mut busy_ns) = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.running != 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+            (st.panicked, std::mem::take(&mut st.busy_ns))
+        };
+        let wall_ns = wall.elapsed().as_nanos() as u64;
+        busy_ns.insert(0, caller_busy);
+
+        // Release the region before any panic re-raise: unwinding while
+        // holding the guard would poison the region mutex and silently
+        // degrade every future region to the inline fallback.
+        drop(_region);
+        if let Err(p) = caller {
+            resume_unwind(p);
+        }
+        assert!(
+            !worker_panicked,
+            "pool worker panicked inside a parallel region"
+        );
+        RunReport {
+            wall_ns: wall_ns.max(1),
+            busy_ns,
+        }
+    }
+}
+
+/// The process-wide pool all kernels share.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(WorkerPool::new)
+}
+
+/// Run `f` on the process-wide pool; see [`WorkerPool::run`].
+pub fn run(threads: usize, f: &(dyn Fn() + Sync)) -> RunReport {
+    global().run(threads, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+    // Tests that assert exact participant counts use a private pool:
+    // the global pool is shared process-wide, so a concurrently running
+    // test could hold its region and force the inline fallback here.
+
+    /// Drain 0..n through an atomic index, summing into `total`.
+    fn drain_sum(n: u64, next: &AtomicU64, total: &AtomicU64) {
+        loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            total.fetch_add(i, Ordering::Relaxed);
+        }
+    }
+
+    #[test]
+    fn all_participants_run_and_work_is_complete() {
+        let pool = WorkerPool::new();
+        let n = 10_000u64;
+        let next = AtomicU64::new(0);
+        let total = AtomicU64::new(0);
+        let calls = AtomicUsize::new(0);
+        let report = pool.run(4, &|| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            drain_sum(n, &next, &total);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), n * (n - 1) / 2);
+        assert_eq!(calls.load(Ordering::Relaxed), 4);
+        assert_eq!(report.busy_ns.len(), 4);
+        assert!(report.utilization_pct().all(|p| p <= 100));
+    }
+
+    #[test]
+    fn single_thread_runs_inline() {
+        let calls = AtomicUsize::new(0);
+        let report = run(1, &|| {
+            calls.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 1);
+        assert_eq!(report.busy_ns.len(), 1);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_regions() {
+        let pool = WorkerPool::new();
+        for round in 1..=5u64 {
+            let n = 1_000 * round;
+            let next = AtomicU64::new(0);
+            let total = AtomicU64::new(0);
+            pool.run(3, &|| drain_sum(n, &next, &total));
+            assert_eq!(total.load(Ordering::Relaxed), n * (n - 1) / 2);
+        }
+    }
+
+    #[test]
+    fn nested_region_falls_back_to_inline() {
+        // A job that opens another region on the same pool while one is
+        // live: the inner call must not deadlock; it runs inline on the
+        // calling participant.
+        let pool = WorkerPool::new();
+        let inner_calls = AtomicUsize::new(0);
+        let report = pool.run(2, &|| {
+            let r = pool.run(2, &|| {
+                inner_calls.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(r.busy_ns.len(), 1, "inner region must run inline");
+        });
+        assert_eq!(report.busy_ns.len(), 2);
+        // One inline inner run per outer participant.
+        assert_eq!(inner_calls.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn participant_panic_propagates_to_caller() {
+        let pool = WorkerPool::new();
+        let hits = AtomicUsize::new(0);
+        pool.run(2, &|| {
+            // Exactly one participant panics — whichever claims first.
+            if hits.fetch_add(1, Ordering::Relaxed) == 0 {
+                panic!("injected participant panic");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_region() {
+        let pool = WorkerPool::new();
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(2, &|| panic!("injected"));
+        }));
+        // The next region must still complete on the same workers.
+        let n = 2_000u64;
+        let next = AtomicU64::new(0);
+        let total = AtomicU64::new(0);
+        pool.run(2, &|| drain_sum(n, &next, &total));
+        assert_eq!(total.load(Ordering::Relaxed), n * (n - 1) / 2);
+    }
+}

@@ -3,12 +3,42 @@
 //! products formed exactly in `m_p = 5` bits, and every partial sum
 //! rounded to the `(1,6,m_acc)` accumulator format, optionally with
 //! two-level chunked accumulation.
+//!
+//! Two implementations share one semantics:
+//!
+//! * [`rp_gemm_ref`] — the scalar reference: quantize both operands,
+//!   materialize the product terms of each dot, run the accumulation
+//!   algorithms from [`super::accumulate`]. Slow, obviously correct,
+//!   and the oracle the kernel is pinned against.
+//! * the **kernel** ([`rp_gemm`] / [`rp_gemm_ex`] / [`rp_gemm_packed`])
+//!   — row-panel parallel over the persistent [`crate::runtime::pool`],
+//!   with a fused quantize-MAC inner loop monomorphized per
+//!   `(Rounding, chunked?)` and format constants precomputed in
+//!   [`Quantizer`]s. Because every output element is an independent
+//!   reduced-precision dot product, the result is **bit-identical at
+//!   any thread count** and to the reference (asserted across layouts,
+//!   modes and thread counts in `tests/gemm.rs` and the CI hash smoke).
+//!
+//! [`rp_gemm_ex`] additionally takes a [`Layout`] flag (NN/NT/TN) so
+//! callers with transposed access patterns (the trainer's `dW = Xᵀ·dY`)
+//! stop materializing `.t()` copies, and a [`GemmCtx`] carrying the
+//! thread count and a cooperative deadline that is checked between row
+//! panels — a long GEMM inside a served train request cancels mid-flight
+//! instead of running to completion. See `docs/gemm.md`.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
 
 use super::accumulate::{chunked_sum, sequential_sum};
 use super::arith::RpArith;
 use super::format::FpFormat;
-use super::quant::{quantize, Rounding};
+use super::quant::{quantize, Quantizer, Rne, RoundMode, Rounding, Rtz};
 use super::tensor::Tensor;
+use crate::coordinator::sweep::default_threads;
+use crate::runtime::pool;
+use crate::telemetry;
 
 /// Configuration of a reduced-precision GEMM.
 #[derive(Clone, Copy, Debug)]
@@ -58,29 +88,164 @@ impl GemmConfig {
     }
 }
 
+/// Operand layout of `C = op(A)·op(B)`: which sides arrive transposed.
+/// Lets callers keep operands in natural storage instead of
+/// materializing `.t()` copies; the transpose is folded into the packing
+/// step of the kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Layout {
+    /// `C = A·B` — `A: [m,k]`, `B: [k,n]`.
+    #[default]
+    NN,
+    /// `C = A·Bᵀ` — `A: [m,k]`, `B: [n,k]`.
+    NT,
+    /// `C = Aᵀ·B` — `A: [k,m]`, `B: [k,n]`.
+    TN,
+}
+
+/// Execution context of one GEMM call: parallelism and cooperative
+/// cancellation. The default (`threads: 0`, no deadline) means one
+/// participant per available core — the repo-wide convention shared
+/// with `coordinator::sweep::default_threads` and the serve pool.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GemmCtx {
+    /// Participants (caller + pool workers); `0` = one per core. Any
+    /// value yields bit-identical output.
+    pub threads: usize,
+    /// Checked between row panels; once passed, the GEMM stops claiming
+    /// panels and returns [`Interrupted`].
+    pub deadline: Option<Instant>,
+}
+
+/// A GEMM stopped cooperatively because its [`GemmCtx::deadline`]
+/// passed. The partially written output is discarded — no partial
+/// result escapes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interrupted;
+
+impl std::fmt::Display for Interrupted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("GEMM interrupted by its deadline")
+    }
+}
+
+impl std::error::Error for Interrupted {}
+
+/// A rank-2 operand pre-quantized to a representation format, carrying
+/// row-major data plus a lazily built column-major copy — one
+/// quantization pass serves every GEMM that needs either orientation of
+/// the operand (e.g. the trainer's `W2`, read column-wise by FWD and
+/// row-wise by BWD in the same step). The `(repr, mode)` key records
+/// what the data was quantized under; [`QuantizedOperand::matches`] is
+/// the cache-validity check. Invalidation is the *owner's* job: any
+/// mutation of the source tensor (an SGD weight update) must drop the
+/// packed operand (see `docs/gemm.md`).
+pub struct QuantizedOperand {
+    rows: usize,
+    cols: usize,
+    key: Option<(FpFormat, Rounding)>,
+    row_major: Vec<f32>,
+    col_major: OnceLock<Vec<f32>>,
+}
+
+impl QuantizedOperand {
+    /// Quantize rank-2 `t` under `repr`/`mode` (`repr = None` keeps f32).
+    pub fn new(t: &Tensor, repr: Option<FpFormat>, mode: Rounding) -> QuantizedOperand {
+        assert_eq!(t.rank(), 2);
+        let row_major = match repr {
+            Some(fmt) => {
+                let q = Quantizer::new(fmt, mode);
+                t.data.iter().map(|&x| q.quantize(x as f64) as f32).collect()
+            }
+            None => t.data.clone(),
+        };
+        QuantizedOperand {
+            rows: t.shape[0],
+            cols: t.shape[1],
+            key: repr.map(|f| (f, mode)),
+            row_major,
+            col_major: OnceLock::new(),
+        }
+    }
+
+    /// Pack `t` for the GEMM config `cfg` (its `repr` and `mode`).
+    pub fn for_cfg(t: &Tensor, cfg: &GemmConfig) -> QuantizedOperand {
+        QuantizedOperand::new(t, cfg.repr, cfg.mode)
+    }
+
+    /// The `(repr, mode)` key a config would quantize operands under.
+    pub fn key_of(cfg: &GemmConfig) -> Option<(FpFormat, Rounding)> {
+        cfg.repr.map(|f| (f, cfg.mode))
+    }
+
+    /// Is this packed operand valid for `cfg` (same repr format and
+    /// rounding mode)? `false` means the caller must re-pack.
+    pub fn matches(&self, cfg: &GemmConfig) -> bool {
+        self.key == Self::key_of(cfg)
+    }
+
+    /// Source shape `(rows, cols)`.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    fn row_view(&self) -> &[f32] {
+        &self.row_major
+    }
+
+    /// Column-major copy (the transpose), built once on first use from
+    /// the already-quantized data — the transpose is never re-quantized
+    /// (quantization is elementwise, so the two commute).
+    fn col_view(&self) -> &[f32] {
+        self.col_major.get_or_init(|| {
+            let (r, c) = (self.rows, self.cols);
+            let mut out = vec![0.0f32; r * c];
+            for i in 0..r {
+                for j in 0..c {
+                    out[j * r + i] = self.row_major[i * c + j];
+                }
+            }
+            out
+        })
+    }
+}
+
 /// One reduced-precision dot product over pre-quantized operand slices.
 ///
 /// `a` strided by `sa`, `b` strided by `sb`, length `k`. Products are
 /// rounded to `cfg.prod`, partial sums to `cfg.acc` (sequential or
-/// chunked). This is the exact inner loop the VRR analysis models.
-pub fn rp_dot(
-    a: &[f32],
-    sa: usize,
-    b: &[f32],
-    sb: usize,
-    k: usize,
-    cfg: &GemmConfig,
-) -> f64 {
-    // Materialize the product terms first (each rounded to m_p), then run
-    // the chosen accumulation algorithm over them.
-    let mut prods: Vec<f64> = Vec::with_capacity(k);
-    for l in 0..k {
-        let p = a[l * sa] as f64 * b[l * sb] as f64;
-        prods.push(quantize(p, cfg.prod, cfg.mode));
-    }
+/// chunked). This is the exact inner loop the VRR analysis models, and
+/// the documented reference form of the kernel's fused quantize-MAC
+/// loop — same [`Quantizer`] ops in the same order, no intermediate
+/// product buffer (it used to allocate a `Vec` per call).
+pub fn rp_dot(a: &[f32], sa: usize, b: &[f32], sb: usize, k: usize, cfg: &GemmConfig) -> f64 {
+    let prod_q = Quantizer::new(cfg.prod, cfg.mode);
+    let acc_q = Quantizer::new(cfg.acc, cfg.mode);
     match cfg.chunk {
-        Some(c) => chunked_sum(&prods, c, cfg.acc, cfg.mode),
-        None => sequential_sum(&prods, cfg.acc, cfg.mode),
+        None => {
+            let mut s = 0.0f64;
+            for l in 0..k {
+                let p = prod_q.quantize(a[l * sa] as f64 * b[l * sb] as f64);
+                s = acc_q.quantize(s + p);
+            }
+            s
+        }
+        Some(c) => {
+            assert!(c > 0, "chunk size must be positive");
+            let mut inter = 0.0f64;
+            let mut l = 0;
+            while l < k {
+                let end = (l + c).min(k);
+                let mut intra = 0.0f64;
+                for i in l..end {
+                    let p = prod_q.quantize(a[i * sa] as f64 * b[i * sb] as f64);
+                    intra = acc_q.quantize(intra + p);
+                }
+                inter = acc_q.quantize(inter + intra);
+                l = end;
+            }
+            inter
+        }
     }
 }
 
@@ -89,8 +254,279 @@ pub fn rp_dot(
 /// Inputs are first quantized to the representation format (if any); each
 /// output element is an independent length-`k` reduced-precision
 /// accumulation — matching how a systolic/SIMT GEMM partitions work, and
-/// matching Assumption 1's per-dot-product view.
+/// matching Assumption 1's per-dot-product view. Runs the parallel
+/// kernel with default context (one participant per core, no deadline).
 pub fn rp_gemm(a: &Tensor, b: &Tensor, cfg: &GemmConfig) -> Tensor {
+    rp_gemm_ex(a, b, cfg, Layout::NN, &GemmCtx::default())
+        .expect("rp_gemm: no deadline in the default context")
+}
+
+/// Layout-aware reduced-precision GEMM: `C = op(A)·op(B)` per `layout`,
+/// executed under `ctx` (thread count, cooperative deadline). Operands
+/// are representation-quantized once here; use [`rp_gemm_packed`] to
+/// reuse a [`QuantizedOperand`] across calls.
+pub fn rp_gemm_ex(
+    a: &Tensor,
+    b: &Tensor,
+    cfg: &GemmConfig,
+    layout: Layout,
+    ctx: &GemmCtx,
+) -> Result<Tensor, Interrupted> {
+    let aq = QuantizedOperand::for_cfg(a, cfg);
+    let bq = QuantizedOperand::for_cfg(b, cfg);
+    rp_gemm_packed(&aq, &bq, cfg, layout, ctx)
+}
+
+/// Layout-aware reduced-precision GEMM over pre-packed operands. The
+/// operands must have been packed under `cfg`'s `(repr, mode)` key —
+/// checked in debug builds; see [`QuantizedOperand::matches`].
+pub fn rp_gemm_packed(
+    a: &QuantizedOperand,
+    b: &QuantizedOperand,
+    cfg: &GemmConfig,
+    layout: Layout,
+    ctx: &GemmCtx,
+) -> Result<Tensor, Interrupted> {
+    debug_assert!(
+        a.matches(cfg) && b.matches(cfg),
+        "operand packed under a different (repr, mode) key than the GEMM config"
+    );
+    // The kernel wants rows of op(A) and *columns* of op(B) contiguous;
+    // both views are length-k panels, so `b_view` is op(B)ᵀ as [n,k].
+    let ((m, k), a_view) = match layout {
+        Layout::NN | Layout::NT => (a.shape(), a.row_view()),
+        Layout::TN => {
+            let (k, m) = a.shape();
+            ((m, k), a.col_view())
+        }
+    };
+    let ((kb, n), b_view) = match layout {
+        Layout::NN | Layout::TN => {
+            let (kb, n) = b.shape();
+            ((kb, n), b.col_view())
+        }
+        Layout::NT => {
+            let (n, kb) = b.shape();
+            ((kb, n), b.row_view())
+        }
+    };
+    assert_eq!(k, kb, "inner dims mismatch: {k} vs {kb}");
+    run_panels(a_view, b_view, m, n, k, cfg, ctx)
+}
+
+/// Output pointer shared across pool participants. Sound: participants
+/// claim disjoint row-panel ranges from an atomic index, so no two
+/// threads ever touch the same element.
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Telemetry handles, resolved once per process (not per GEMM).
+type GemmTel = (
+    Arc<telemetry::Counter>,
+    Arc<telemetry::Histogram>,
+    Arc<telemetry::Histogram>,
+);
+
+fn gemm_tel() -> &'static GemmTel {
+    static TEL: OnceLock<GemmTel> = OnceLock::new();
+    TEL.get_or_init(|| {
+        (
+            telemetry::counter("abws_gemm_macs_total"),
+            telemetry::histogram("abws_gemm_wall_ns"),
+            telemetry::histogram("abws_gemm_worker_utilization_pct"),
+        )
+    })
+}
+
+/// The packed kernel: `a` holds the m rows of op(A), `b` the n columns
+/// of op(B) (each a contiguous length-`k` panel). Row panels of the
+/// output are claimed from an atomic index by every pool participant;
+/// the deadline is polled once per claimed panel.
+fn run_panels(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    cfg: &GemmConfig,
+    ctx: &GemmCtx,
+) -> Result<Tensor, Interrupted> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut out = Tensor::zeros(&[m, n]);
+    if m == 0 || n == 0 {
+        return Ok(out);
+    }
+    if let Some(c) = cfg.chunk {
+        assert!(c > 0, "chunk size must be positive");
+    }
+
+    let threads = if ctx.threads == 0 {
+        default_threads()
+    } else {
+        ctx.threads
+    };
+    let threads = threads.clamp(1, m);
+    // ~4 panels per participant: enough slack for load balancing and for
+    // deadline polls, few enough that claim traffic stays negligible.
+    let panel = m.div_ceil(threads * 4).max(1);
+
+    let kern = Kern {
+        a,
+        b,
+        n,
+        k,
+        prod: Quantizer::new(cfg.prod, cfg.mode),
+        acc: Quantizer::new(cfg.acc, cfg.mode),
+        mode: cfg.mode,
+        chunk: cfg.chunk,
+    };
+
+    let next = AtomicUsize::new(0);
+    let cancelled = AtomicBool::new(false);
+    let out_ptr = SendPtr(out.data.as_mut_ptr());
+    let deadline = ctx.deadline;
+
+    let job = || {
+        loop {
+            if cancelled.load(Ordering::Relaxed) {
+                break;
+            }
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    cancelled.store(true, Ordering::Relaxed);
+                    break;
+                }
+            }
+            let start = next.fetch_add(panel, Ordering::Relaxed);
+            if start >= m {
+                break;
+            }
+            let end = (start + panel).min(m);
+            // Disjoint rows `start..end` of the output — exclusively
+            // ours for this panel (see `SendPtr`).
+            let out_rows = unsafe {
+                std::slice::from_raw_parts_mut(out_ptr.0.add(start * n), (end - start) * n)
+            };
+            kern.run(start..end, out_rows);
+        }
+    };
+    let report = pool::run(threads, &job);
+
+    if telemetry::enabled() {
+        let (macs, wall_ns, util_pct) = gemm_tel();
+        wall_ns.record(report.wall_ns);
+        for pct in report.utilization_pct() {
+            util_pct.record(pct);
+        }
+        if !cancelled.load(Ordering::Relaxed) {
+            macs.add((m * n * k) as u64);
+        }
+    }
+    if cancelled.load(Ordering::Relaxed) {
+        return Err(Interrupted);
+    }
+    Ok(out)
+}
+
+/// The monomorphized fused quantize-MAC kernel over a row range.
+struct Kern<'a> {
+    /// Rows of op(A): m contiguous length-k panels.
+    a: &'a [f32],
+    /// Columns of op(B): n contiguous length-k panels.
+    b: &'a [f32],
+    n: usize,
+    k: usize,
+    prod: Quantizer,
+    acc: Quantizer,
+    mode: Rounding,
+    chunk: Option<usize>,
+}
+
+impl Kern<'_> {
+    /// Compute output rows `rows` into `out` (`rows.len() * n` floats).
+    /// Resolves the `(mode, chunked?)` monomorphization and the
+    /// both-formats-identity fast path once per panel — never per
+    /// element.
+    fn run(&self, rows: Range<usize>, out: &mut [f32]) {
+        if self.prod.is_identity() && self.acc.is_identity() && self.chunk.is_none() {
+            return self.rows_identity(rows, out);
+        }
+        match (self.mode, self.chunk.is_some()) {
+            (Rounding::NearestEven, false) => self.rows_fused::<Rne, false>(rows, out),
+            (Rounding::NearestEven, true) => self.rows_fused::<Rne, true>(rows, out),
+            (Rounding::TowardZero, false) => self.rows_fused::<Rtz, false>(rows, out),
+            (Rounding::TowardZero, true) => self.rows_fused::<Rtz, true>(rows, out),
+        }
+    }
+
+    /// Both formats at least f64-wide and sequential accumulation: every
+    /// quantization is the identity, so the dot is a plain f64 sum in
+    /// the same association order — bit-identical to the fused path,
+    /// minus all per-element branching. (Chunked identity configs still
+    /// take the fused path: chunking changes the association order even
+    /// when rounding is the identity.)
+    fn rows_identity(&self, rows: Range<usize>, out: &mut [f32]) {
+        let (n, k) = (self.n, self.k);
+        for (oi, i) in rows.enumerate() {
+            let arow = &self.a[i * k..(i + 1) * k];
+            for j in 0..n {
+                let bcol = &self.b[j * k..(j + 1) * k];
+                let mut s = 0.0f64;
+                for (&x, &y) in arow.iter().zip(bcol) {
+                    s += x as f64 * y as f64;
+                }
+                out[oi * n + j] = s as f32;
+            }
+        }
+    }
+
+    /// The fused quantize-MAC loop: product rounding and partial-sum
+    /// rounding inline per MAC, no intermediate product buffer, format
+    /// constants precomputed in the [`Quantizer`]s, rounding mode
+    /// monomorphized via `R`. Matches the reference
+    /// `quantize`-then-`sequential_sum`/`chunked_sum` composition
+    /// bit-for-bit (same operations, same order).
+    fn rows_fused<R: RoundMode, const CHUNKED: bool>(&self, rows: Range<usize>, out: &mut [f32]) {
+        let (n, k) = (self.n, self.k);
+        let (prod, acc) = (self.prod, self.acc);
+        let chunk = if CHUNKED { self.chunk.unwrap_or(1) } else { 1 };
+        for (oi, i) in rows.enumerate() {
+            let arow = &self.a[i * k..(i + 1) * k];
+            for j in 0..n {
+                let bcol = &self.b[j * k..(j + 1) * k];
+                let s = if CHUNKED {
+                    let mut inter = 0.0f64;
+                    for (ab, bb) in arow.chunks(chunk).zip(bcol.chunks(chunk)) {
+                        let mut intra = 0.0f64;
+                        for (&x, &y) in ab.iter().zip(bb) {
+                            let p = prod.quantize_m::<R>(x as f64 * y as f64);
+                            intra = acc.quantize_m::<R>(intra + p);
+                        }
+                        inter = acc.quantize_m::<R>(inter + intra);
+                    }
+                    inter
+                } else {
+                    let mut s = 0.0f64;
+                    for (&x, &y) in arow.iter().zip(bcol) {
+                        let p = prod.quantize_m::<R>(x as f64 * y as f64);
+                        s = acc.quantize_m::<R>(s + p);
+                    }
+                    s
+                };
+                out[oi * n + j] = s as f32;
+            }
+        }
+    }
+}
+
+/// Scalar reference GEMM — the original implementation, retained
+/// verbatim as the oracle for the kernel's bit-identity suite
+/// (`tests/gemm.rs`): quantize the operands, materialize each dot's
+/// product terms, then run the accumulation algorithms from
+/// [`super::accumulate`].
+pub fn rp_gemm_ref(a: &Tensor, b: &Tensor, cfg: &GemmConfig) -> Tensor {
     assert_eq!(a.rank(), 2);
     assert_eq!(b.rank(), 2);
     let (m, k) = (a.shape[0], a.shape[1]);
@@ -109,9 +545,8 @@ pub fn rp_gemm(a: &Tensor, b: &Tensor, cfg: &GemmConfig) -> Tensor {
     };
 
     let mut out = Tensor::zeros(&[m, n]);
-    // One scratch buffer for the product terms of every dot (hot loop:
-    // no per-dot allocation), and a transposed copy of B for contiguous
-    // column access.
+    // One scratch buffer for the product terms of every dot, and a
+    // transposed copy of B for contiguous column access.
     let bt = b.t();
     let mut prods = vec![0.0f64; k];
     for i in 0..m {
@@ -205,6 +640,11 @@ pub fn gemm_nzr(a: &Tensor, b: &Tensor) -> f64 {
 mod tests {
     use super::*;
     use crate::util::Pcg64;
+    use std::time::Duration;
+
+    fn bits(t: &Tensor) -> Vec<u32> {
+        t.data.iter().map(|x| x.to_bits()).collect()
+    }
 
     #[test]
     fn baseline_matches_f64_matmul() {
@@ -216,6 +656,96 @@ mod tests {
         for (x, y) in c.data.iter().zip(&want.data) {
             assert!((x - y).abs() <= 1e-5 * y.abs().max(1.0), "{x} vs {y}");
         }
+    }
+
+    #[test]
+    fn kernel_matches_scalar_reference_bitwise() {
+        let mut rng = Pcg64::seeded(14);
+        let a = Tensor::randn(&[7, 129], 1.0, &mut rng);
+        let b = Tensor::randn(&[129, 5], 1.0, &mut rng);
+        for cfg in [
+            GemmConfig::paper(6, None),
+            GemmConfig::paper(6, Some(32)),
+            GemmConfig::baseline(),
+        ] {
+            let want = bits(&rp_gemm_ref(&a, &b, &cfg));
+            for threads in [1usize, 2, 4] {
+                let ctx = GemmCtx {
+                    threads,
+                    deadline: None,
+                };
+                let got = rp_gemm_ex(&a, &b, &cfg, Layout::NN, &ctx).unwrap();
+                assert_eq!(bits(&got), want, "threads={threads} cfg={cfg:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn layouts_match_materialized_transposes() {
+        let mut rng = Pcg64::seeded(15);
+        let a = Tensor::randn(&[4, 33], 1.0, &mut rng);
+        let b = Tensor::randn(&[33, 6], 1.0, &mut rng);
+        let cfg = GemmConfig::paper(8, Some(16));
+        let ctx = GemmCtx::default();
+        let want = bits(&rp_gemm_ref(&a, &b, &cfg));
+        // NT: pass Bᵀ with the NT flag instead of materializing B.
+        let b_nt = b.t();
+        let got_nt = rp_gemm_ex(&a, &b_nt, &cfg, Layout::NT, &ctx).unwrap();
+        assert_eq!(bits(&got_nt), want);
+        // TN: pass Aᵀ with the TN flag.
+        let a_tn = a.t();
+        let got_tn = rp_gemm_ex(&a_tn, &b, &cfg, Layout::TN, &ctx).unwrap();
+        assert_eq!(bits(&got_tn), want);
+    }
+
+    #[test]
+    fn packed_operands_reuse_one_quantization() {
+        let mut rng = Pcg64::seeded(16);
+        let x = Tensor::randn(&[6, 40], 1.0, &mut rng);
+        let w = Tensor::randn(&[40, 3], 1.0, &mut rng);
+        let cfg = GemmConfig::paper(9, None);
+        let xq = QuantizedOperand::for_cfg(&x, &cfg);
+        let wq = QuantizedOperand::for_cfg(&w, &cfg);
+        assert!(xq.matches(&cfg) && wq.matches(&cfg));
+        let ctx = GemmCtx::default();
+        let via_packed = rp_gemm_packed(&xq, &wq, &cfg, Layout::NN, &ctx).unwrap();
+        assert_eq!(bits(&via_packed), bits(&rp_gemm(&x, &w, &cfg)));
+        // A different key invalidates the pack.
+        let other = GemmConfig::paper(9, None);
+        let other = GemmConfig {
+            mode: Rounding::TowardZero,
+            ..other
+        };
+        assert!(!xq.matches(&other));
+    }
+
+    #[test]
+    fn expired_deadline_interrupts() {
+        let mut rng = Pcg64::seeded(17);
+        let a = Tensor::randn(&[8, 64], 1.0, &mut rng);
+        let b = Tensor::randn(&[64, 8], 1.0, &mut rng);
+        let ctx = GemmCtx {
+            threads: 2,
+            deadline: Some(Instant::now() - Duration::from_millis(1)),
+        };
+        let r = rp_gemm_ex(&a, &b, &GemmConfig::paper(8, None), Layout::NN, &ctx);
+        assert_eq!(r.err(), Some(Interrupted));
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        // k = 0: every dot is the empty accumulation (exactly 0.0).
+        let a = Tensor::zeros(&[3, 0]);
+        let b = Tensor::zeros(&[0, 2]);
+        let out = rp_gemm(&a, &b, &GemmConfig::paper(8, Some(64)));
+        assert_eq!(out.shape, vec![3, 2]);
+        assert!(out.data.iter().all(|&x| x == 0.0));
+        // 1×1: a single quantized product.
+        let a = Tensor::from_vec(&[1, 1], vec![0.3]);
+        let b = Tensor::from_vec(&[1, 1], vec![0.7]);
+        let cfg = GemmConfig::paper(8, None);
+        let out = rp_gemm(&a, &b, &cfg);
+        assert_eq!(bits(&out), bits(&rp_gemm_ref(&a, &b, &cfg)));
     }
 
     #[test]
@@ -346,6 +876,35 @@ mod tests {
             let strided = rp_dot(&a.data, 1, &b.data[j..], 5, 33, &cfg);
             let contig = rp_dot(&a.data, 1, &bt.data[j * 33..], 1, 33, &cfg);
             assert_eq!(strided, contig);
+        }
+    }
+
+    #[test]
+    fn rp_dot_matches_materialized_reference() {
+        // The fused (allocation-free) rp_dot must equal the original
+        // quantize-products-then-accumulate composition exactly.
+        let mut rng = Pcg64::seeded(19);
+        let a: Vec<f32> = (0..517).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..517).map(|_| rng.normal() as f32).collect();
+        for cfg in [
+            GemmConfig::paper(7, None),
+            GemmConfig::paper(7, Some(64)),
+            GemmConfig {
+                mode: Rounding::TowardZero,
+                ..GemmConfig::paper(7, Some(33))
+            },
+        ] {
+            let prods: Vec<f64> = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &y)| quantize(x as f64 * y as f64, cfg.prod, cfg.mode))
+                .collect();
+            let want = match cfg.chunk {
+                Some(c) => chunked_sum(&prods, c, cfg.acc, cfg.mode),
+                None => sequential_sum(&prods, cfg.acc, cfg.mode),
+            };
+            let got = rp_dot(&a, 1, &b, 1, 517, &cfg);
+            assert_eq!(got.to_bits(), want.to_bits(), "cfg={cfg:?}");
         }
     }
 }

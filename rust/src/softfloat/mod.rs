@@ -24,6 +24,9 @@ pub mod value;
 
 pub use accumulate::{chunked_sum, pairwise_sum, sequential_sum, Accumulator};
 pub use format::FpFormat;
-pub use gemm::{rp_gemm, GemmConfig};
-pub use quant::{quantize, Rounding};
+pub use gemm::{
+    rp_gemm, rp_gemm_ex, rp_gemm_packed, rp_gemm_ref, GemmConfig, GemmCtx, Interrupted, Layout,
+    QuantizedOperand,
+};
+pub use quant::{quantize, Quantizer, Rounding};
 pub use tensor::Tensor;

@@ -31,66 +31,156 @@ pub enum Rounding {
 ///   `2^{e_min-m}` (subnormals), below half the smallest subnormal the
 ///   value flushes to ±0.
 pub fn quantize(x: f64, fmt: FpFormat, mode: Rounding) -> f64 {
-    if x == 0.0 || !x.is_finite() {
-        return x;
-    }
-    // Quantizing to a format at least as wide as f64 itself is an
-    // identity on finite f64 values (the baseline/ideal configuration).
-    if fmt.man_bits >= 52 {
-        return x;
-    }
-    let m = fmt.man_bits as i32;
-    // Unbiased exponent of |x| via bit inspection (exact, unlike log2).
-    let bits = x.abs().to_bits();
-    let raw_exp = ((bits >> 52) & 0x7ff) as i32;
-    let e = if raw_exp == 0 {
-        // f64-subnormal input (astronomically below any format we simulate).
-        -1074 + (63 - (bits.leading_zeros() as i32)) // exponent of leading bit
-    } else {
-        raw_exp - 1023
-    };
+    Quantizer::new(fmt, mode).quantize(x)
+}
 
-    // Quantum: 2^(e-m) for normals, frozen at 2^(e_min-m) in the subnormal
-    // range of the target format.
-    let q_exp = if e < fmt.e_min() {
-        fmt.e_min() - m
-    } else {
-        e - m
-    };
-    // 2^±q_exp as exact bit patterns — every format we simulate keeps
-    // q_exp well inside f64's normal exponent range (hot path: avoids
-    // powi and the division).
-    debug_assert!((-1022..=1022).contains(&q_exp));
-    let quantum = f64::from_bits(((q_exp + 1023) as u64) << 52);
-    let inv_quantum = f64::from_bits(((-q_exp + 1023) as u64) << 52);
-    let scaled = x * inv_quantum;
-    let rounded = match mode {
-        Rounding::NearestEven => scaled.round_ties_even(),
-        Rounding::TowardZero => scaled.trunc(),
-    };
-    let y = rounded * quantum;
+/// Rounding behaviour lifted to the type level, so hot loops (the GEMM
+/// kernel, [`Quantizer::quantize_m`]) can be monomorphized per mode
+/// instead of matching on [`Rounding`] once per element. Both impls are
+/// zero-sized.
+pub trait RoundMode: 'static {
+    /// The dynamic mode this type stands for.
+    const MODE: Rounding;
+    /// Round a value already scaled to an integer count of quanta.
+    fn round(scaled: f64) -> f64;
+    /// Resolve an overflow past `max_finite` (sign taken from `y`).
+    fn overflow(y: f64, max: f64) -> f64;
+}
 
-    // Overflow handling (the rounding may also have bumped into the next
-    // binade, possibly crossing e_max).
-    let max = fmt.max_finite();
-    if y.abs() > max {
-        match mode {
-            Rounding::NearestEven => {
-                // IEEE: round-to-nearest overflows to ∞ once past the
-                // midpoint between max_finite and the next (unrepresentable)
-                // value; our scaled rounding already decided that.
-                return if y > 0.0 {
-                    f64::INFINITY
-                } else {
-                    f64::NEG_INFINITY
-                };
-            }
-            Rounding::TowardZero => {
-                return if y > 0.0 { max } else { -max };
-            }
+/// Type-level [`Rounding::NearestEven`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Rne;
+
+/// Type-level [`Rounding::TowardZero`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Rtz;
+
+impl RoundMode for Rne {
+    const MODE: Rounding = Rounding::NearestEven;
+
+    #[inline(always)]
+    fn round(scaled: f64) -> f64 {
+        scaled.round_ties_even()
+    }
+
+    #[inline(always)]
+    fn overflow(y: f64, _max: f64) -> f64 {
+        // IEEE: round-to-nearest overflows to ∞ once past the midpoint
+        // between max_finite and the next (unrepresentable) value; the
+        // scaled rounding already decided that.
+        if y > 0.0 {
+            f64::INFINITY
+        } else {
+            f64::NEG_INFINITY
         }
     }
-    y
+}
+
+impl RoundMode for Rtz {
+    const MODE: Rounding = Rounding::TowardZero;
+
+    #[inline(always)]
+    fn round(scaled: f64) -> f64 {
+        scaled.trunc()
+    }
+
+    #[inline(always)]
+    fn overflow(y: f64, max: f64) -> f64 {
+        if y > 0.0 {
+            max
+        } else {
+            -max
+        }
+    }
+}
+
+/// A quantizer with the per-format constants hoisted out of the call:
+/// mantissa width, `e_min`, `max_finite`, and the `man_bits >= 52`
+/// identity test are computed once at construction instead of once per
+/// quantized value. [`Quantizer::quantize`] is bit-for-bit identical to
+/// the free [`quantize`] function (which now delegates here; the
+/// equivalence is additionally pinned by a PCG property sweep in
+/// `tests/gemm.rs` spanning subnormal, normal, and overflow ranges).
+#[derive(Clone, Copy, Debug)]
+pub struct Quantizer {
+    mode: Rounding,
+    /// Target at least as wide as f64 — quantization is the identity.
+    identity: bool,
+    m: i32,
+    e_min: i32,
+    max: f64,
+}
+
+impl Quantizer {
+    pub fn new(fmt: FpFormat, mode: Rounding) -> Quantizer {
+        Quantizer {
+            mode,
+            identity: fmt.man_bits >= 52,
+            m: fmt.man_bits as i32,
+            e_min: fmt.e_min(),
+            max: fmt.max_finite(),
+        }
+    }
+
+    /// True iff the target format is at least as wide as f64 itself, so
+    /// quantization passes every finite value through unchanged. Kernels
+    /// branch on this once per panel instead of once per element.
+    #[inline]
+    pub fn is_identity(&self) -> bool {
+        self.identity
+    }
+
+    /// Quantize `x` — dispatches once on the stored mode.
+    #[inline]
+    pub fn quantize(&self, x: f64) -> f64 {
+        match self.mode {
+            Rounding::NearestEven => self.quantize_m::<Rne>(x),
+            Rounding::TowardZero => self.quantize_m::<Rtz>(x),
+        }
+    }
+
+    /// Monomorphized quantize; `R` must match the constructed mode (the
+    /// GEMM kernel resolves `R` once per config and calls this in its
+    /// fused quantize-MAC inner loop).
+    #[inline]
+    pub fn quantize_m<R: RoundMode>(&self, x: f64) -> f64 {
+        debug_assert_eq!(R::MODE, self.mode);
+        if self.identity || x == 0.0 || !x.is_finite() {
+            return x;
+        }
+        // Unbiased exponent of |x| via bit inspection (exact, unlike log2).
+        let bits = x.abs().to_bits();
+        let raw_exp = ((bits >> 52) & 0x7ff) as i32;
+        let e = if raw_exp == 0 {
+            // f64-subnormal input (astronomically below any simulated format).
+            -1074 + (63 - (bits.leading_zeros() as i32)) // exponent of leading bit
+        } else {
+            raw_exp - 1023
+        };
+
+        // Quantum: 2^(e-m) for normals, frozen at 2^(e_min-m) in the
+        // subnormal range of the target format.
+        let q_exp = if e < self.e_min {
+            self.e_min - self.m
+        } else {
+            e - self.m
+        };
+        // 2^±q_exp as exact bit patterns — every format we simulate keeps
+        // q_exp well inside f64's normal exponent range (hot path: avoids
+        // powi and the division).
+        debug_assert!((-1022..=1022).contains(&q_exp));
+        let quantum = f64::from_bits(((q_exp + 1023) as u64) << 52);
+        let inv_quantum = f64::from_bits(((-q_exp + 1023) as u64) << 52);
+        let y = R::round(x * inv_quantum) * quantum;
+
+        // Overflow handling (the rounding may also have bumped into the
+        // next binade, possibly crossing e_max).
+        if y.abs() > self.max {
+            R::overflow(y, self.max)
+        } else {
+            y
+        }
+    }
 }
 
 /// Quantize with round-to-nearest-even (the common case).
@@ -278,6 +368,40 @@ mod tests {
                 assert_eq!(a, b, "fmt={fmt} x={x} k={k}");
             }
         }
+    }
+
+    #[test]
+    fn quantizer_matches_free_function() {
+        // The precomputed-constant path must agree with the reference
+        // free function on every input class, both modes, including the
+        // identity (wide) formats and non-finite pass-through.
+        let mut rng = Pcg64::seeded(61);
+        for fmt in [FP8, FpFormat::accumulator(7), FpFormat::FP16, FpFormat::new(11, 52)] {
+            for mode in [Rounding::NearestEven, Rounding::TowardZero] {
+                let q = Quantizer::new(fmt, mode);
+                for special in [0.0, -0.0, f64::INFINITY, f64::NEG_INFINITY] {
+                    assert_eq!(
+                        q.quantize(special).to_bits(),
+                        quantize(special, fmt, mode).to_bits()
+                    );
+                }
+                assert!(q.quantize(f64::NAN).is_nan());
+                for _ in 0..20_000 {
+                    let x = rng.normal() * 2f64.powi((rng.next_below(40) as i32) - 20);
+                    assert_eq!(
+                        q.quantize(x).to_bits(),
+                        quantize(x, fmt, mode).to_bits(),
+                        "fmt={fmt} mode={mode:?} x={x:e}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantizer_identity_flag() {
+        assert!(Quantizer::new(FpFormat::new(11, 52), Rounding::NearestEven).is_identity());
+        assert!(!Quantizer::new(FP8, Rounding::NearestEven).is_identity());
     }
 
     #[test]

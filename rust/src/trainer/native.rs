@@ -6,8 +6,12 @@
 //! per-GEMM precisions in Table 1. Used by the Fig. 1a / Fig. 6 style
 //! experiments where per-MAC rounding must be exact.
 
+use std::cell::RefCell;
+
 use crate::data::synth::Dataset;
-use crate::softfloat::gemm::{rp_gemm, GemmConfig};
+use crate::softfloat::gemm::{
+    rp_gemm_packed, GemmConfig, GemmCtx, Interrupted, Layout, QuantizedOperand,
+};
 use crate::softfloat::tensor::Tensor;
 use crate::trainer::loss::{accuracy, cross_entropy};
 use crate::trainer::metrics::{RunMetrics, StepRecord};
@@ -100,6 +104,38 @@ impl Default for TrainConfig {
     }
 }
 
+/// Packed (representation-quantized) weight operands, one entry per
+/// `(repr, mode)` key in use — the per-step operand cache: each weight
+/// is quantized once per step however many GEMMs read it (W2 is read by
+/// both FWD and BWD). Must be cleared whenever the weights change (the
+/// SGD update at the end of [`NativeTrainer::step`]); a stale pack
+/// would silently train on last step's weights.
+#[derive(Default)]
+struct WeightCache {
+    w1: Vec<QuantizedOperand>,
+    w2: Vec<QuantizedOperand>,
+}
+
+impl WeightCache {
+    fn get<'a>(
+        slot: &'a mut Vec<QuantizedOperand>,
+        t: &Tensor,
+        cfg: &GemmConfig,
+    ) -> &'a QuantizedOperand {
+        if let Some(i) = slot.iter().position(|q| q.matches(cfg)) {
+            &slot[i]
+        } else {
+            slot.push(QuantizedOperand::for_cfg(t, cfg));
+            slot.last().unwrap()
+        }
+    }
+
+    fn clear(&mut self) {
+        self.w1.clear();
+        self.w2.clear();
+    }
+}
+
 /// Two-layer MLP trained with reduced-precision GEMMs.
 pub struct NativeTrainer {
     pub w1: Tensor, // [dim, hidden]
@@ -108,6 +144,7 @@ pub struct NativeTrainer {
     s2: SgdState,
     plan: PrecisionPlan,
     cfg: TrainConfig,
+    cache: RefCell<WeightCache>,
 }
 
 impl NativeTrainer {
@@ -128,20 +165,49 @@ impl NativeTrainer {
             w2,
             plan,
             cfg,
+            cache: RefCell::new(WeightCache::default()),
         }
     }
 
     /// Forward pass; returns (hidden-post-relu, logits).
     pub fn forward(&self, x: &Tensor) -> (Tensor, Tensor) {
-        let h_pre = rp_gemm(x, &self.w1, &self.plan.fwd);
-        let h = h_pre.map(|v| v.max(0.0));
-        let logits = rp_gemm(&h, &self.w2, &self.plan.fwd);
-        (h, logits)
+        self.forward_ctx(x, &GemmCtx::default())
+            .expect("forward: no deadline in the default context")
     }
 
-    /// One SGD step on batch `(x, y)`; returns (loss, train-acc).
-    pub fn step(&mut self, x: &Tensor, y: &[usize]) -> (f64, f64) {
-        let (h, logits) = self.forward(x);
+    /// Forward pass under an execution context (threads + deadline);
+    /// `Err` if the deadline fired inside one of the GEMMs.
+    fn forward_ctx(&self, x: &Tensor, ctx: &GemmCtx) -> Result<(Tensor, Tensor), Interrupted> {
+        let fwd = &self.plan.fwd;
+        let xq = QuantizedOperand::for_cfg(x, fwd);
+        let h_pre = rp_gemm_packed(
+            &xq,
+            WeightCache::get(&mut self.cache.borrow_mut().w1, &self.w1, fwd),
+            fwd,
+            Layout::NN,
+            ctx,
+        )?;
+        let h = h_pre.map(|v| v.max(0.0));
+        let hq = QuantizedOperand::for_cfg(&h, fwd);
+        let logits = rp_gemm_packed(
+            &hq,
+            WeightCache::get(&mut self.cache.borrow_mut().w2, &self.w2, fwd),
+            fwd,
+            Layout::NN,
+            ctx,
+        )?;
+        Ok((h, logits))
+    }
+
+    /// One SGD step on batch `(x, y)`; returns (loss, train-acc), or
+    /// [`Interrupted`] if the configured deadline fired inside a GEMM —
+    /// in which case the weights are untouched (no partial update).
+    pub fn step(&mut self, x: &Tensor, y: &[usize]) -> Result<(f64, f64), Interrupted> {
+        let ctx = GemmCtx {
+            threads: 0,
+            deadline: self.cfg.deadline,
+        };
+        let (h, logits) = self.forward_ctx(x, &ctx)?;
         let (loss, mut dlogits) = cross_entropy(&logits, y);
         let acc = accuracy(&logits, y);
 
@@ -151,10 +217,32 @@ impl NativeTrainer {
             *g *= scale;
         }
 
-        // GRAD GEMM: dW2 = hᵀ · dlogits (accumulation over the batch).
-        let dw2 = rp_gemm(&h.t(), &dlogits, &self.plan.grad);
-        // BWD GEMM: dh = dlogits · W2ᵀ (accumulation over classes).
-        let mut dh = rp_gemm(&dlogits, &self.w2.t(), &self.plan.bwd);
+        let (bwd, grad) = (&self.plan.bwd, &self.plan.grad);
+        // Pack this step's activations once; dlogits feeds both GRAD and
+        // BWD from the same pack when their (repr, mode) keys agree.
+        let dl_grad = QuantizedOperand::for_cfg(&dlogits, grad);
+        let dl_bwd_store;
+        let dl_bwd = if dl_grad.matches(bwd) {
+            &dl_grad
+        } else {
+            dl_bwd_store = QuantizedOperand::for_cfg(&dlogits, bwd);
+            &dl_bwd_store
+        };
+        let hq = QuantizedOperand::for_cfg(&h, grad);
+        let xq = QuantizedOperand::for_cfg(x, grad);
+
+        // GRAD GEMM: dW2 = hᵀ · dlogits (accumulation over the batch) —
+        // the TN layout reads h transposed without materializing `h.t()`.
+        let dw2 = rp_gemm_packed(&hq, &dl_grad, grad, Layout::TN, &ctx)?;
+        // BWD GEMM: dh = dlogits · W2ᵀ (accumulation over classes) — NT
+        // reuses the same packed W2 the forward pass quantized.
+        let mut dh = rp_gemm_packed(
+            dl_bwd,
+            WeightCache::get(&mut self.cache.borrow_mut().w2, &self.w2, bwd),
+            bwd,
+            Layout::NT,
+            &ctx,
+        )?;
         // ReLU backward mask — this is what makes BWD/GRAD operands
         // sparse (NZR ≈ 0.5), as §4.3 models.
         for (g, hv) in dh.data.iter_mut().zip(&h.data) {
@@ -163,11 +251,15 @@ impl NativeTrainer {
             }
         }
         // GRAD GEMM: dW1 = xᵀ · dh.
-        let dw1 = rp_gemm(&x.t(), &dh, &self.plan.grad);
+        let dhq = QuantizedOperand::for_cfg(&dh, grad);
+        let dw1 = rp_gemm_packed(&xq, &dhq, grad, Layout::TN, &ctx)?;
 
+        // Apply updates only after every GEMM succeeded, then drop the
+        // packed weights: they describe the pre-update values.
         self.s2.step(&mut self.w2, &dw2, &self.cfg.sgd);
         self.s1.step(&mut self.w1, &dw1, &self.cfg.sgd);
-        (loss, acc)
+        self.cache.borrow_mut().clear();
+        Ok((loss, acc))
     }
 
     /// Full training loop over a dataset; returns the metrics trace.
@@ -190,7 +282,16 @@ impl NativeTrainer {
             }
             let (xb, yb) = data.batch(step, self.cfg.batch);
             let timer = tel.as_ref().map(|_| crate::telemetry::Timer::start());
-            let (loss, acc) = self.step(&xb, &yb);
+            let (loss, acc) = match self.step(&xb, &yb) {
+                Ok(v) => v,
+                // The deadline fired between row panels inside a GEMM:
+                // same cooperative stop as the pre-step check, just with
+                // finer granularity.
+                Err(Interrupted) => {
+                    metrics.deadline_exceeded = true;
+                    break;
+                }
+            };
             if let (Some((steps, step_ns)), Some(timer)) = (&tel, timer) {
                 steps.inc();
                 step_ns.record(timer.elapsed_ns());
@@ -333,5 +434,71 @@ mod tests {
         let (h, logits) = t.forward(&xb);
         assert_eq!(h.shape, vec![8, 16]);
         assert_eq!(logits.shape, vec![8, 4]);
+    }
+
+    fn bits(t: &Tensor) -> Vec<u32> {
+        t.data.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn forward_matches_reference_gemms() {
+        // The packed, layout-aware, parallel forward must reproduce the
+        // scalar-reference composition bit-for-bit.
+        use crate::softfloat::gemm::rp_gemm_ref;
+        let (train, _) = small_data();
+        let cfg = TrainConfig {
+            hidden: 16,
+            ..Default::default()
+        };
+        let t = NativeTrainer::new(32, 4, PrecisionPlan::uniform(8, Some(16)), cfg);
+        let (xb, _) = train.batch(0, 8);
+        let fwd = &t.plan.fwd;
+        let h_pre = rp_gemm_ref(&xb, &t.w1, fwd);
+        let h_want = h_pre.map(|v| v.max(0.0));
+        let logits_want = rp_gemm_ref(&h_want, &t.w2, fwd);
+        let (h, logits) = t.forward(&xb);
+        assert_eq!(bits(&h), bits(&h_want));
+        assert_eq!(bits(&logits), bits(&logits_want));
+    }
+
+    #[test]
+    fn weight_cache_invalidated_by_step() {
+        // Trainer A warms its packed-weight cache with a forward pass
+        // before stepping; trainer B steps cold. If the SGD update failed
+        // to drop A's pack, A's post-step forward would run on stale
+        // weights and diverge from B's.
+        let (train, _) = small_data();
+        let cfg = TrainConfig {
+            steps: 5,
+            hidden: 16,
+            ..Default::default()
+        };
+        let mut a = NativeTrainer::new(32, 4, PrecisionPlan::uniform(10, Some(8)), cfg);
+        let mut b = NativeTrainer::new(32, 4, PrecisionPlan::uniform(10, Some(8)), cfg);
+        let (xb, yb) = train.batch(0, 8);
+        let _ = a.forward(&xb);
+        a.step(&xb, &yb).unwrap();
+        b.step(&xb, &yb).unwrap();
+        let (_, la) = a.forward(&xb);
+        let (_, lb) = b.forward(&xb);
+        assert_eq!(bits(&la), bits(&lb));
+    }
+
+    #[test]
+    fn expired_deadline_interrupts_a_step_mid_gemm() {
+        let (train, _) = small_data();
+        let cfg = TrainConfig {
+            hidden: 16,
+            deadline: Some(std::time::Instant::now() - std::time::Duration::from_millis(1)),
+            ..Default::default()
+        };
+        let mut t = NativeTrainer::new(32, 4, PrecisionPlan::baseline(), cfg);
+        let (xb, yb) = train.batch(0, 8);
+        let w1_before = t.w1.data.clone();
+        let w2_before = t.w2.data.clone();
+        assert!(t.step(&xb, &yb).is_err());
+        // No partial update escaped the interrupted step.
+        assert_eq!(t.w1.data, w1_before);
+        assert_eq!(t.w2.data, w2_before);
     }
 }

@@ -1,0 +1,189 @@
+//! Bit-identity regression suite for the parallel reduced-precision GEMM
+//! kernel (ISSUE 8 acceptance): the kernel must be byte-identical to the
+//! retained scalar reference `rp_gemm_ref` at every thread count, in both
+//! rounding modes, under sequential and chunked accumulation, and across
+//! the NN/NT/TN layouts — including k=0 and 1×1 edge shapes. Plus a
+//! PCG-driven property sweep pinning the fused quantize path against
+//! `softfloat::quant::quantize` bit-for-bit from the subnormal range
+//! through overflow saturation.
+
+use abws::softfloat::gemm::{
+    rp_gemm_ex, rp_gemm_packed, rp_gemm_ref, GemmConfig, GemmCtx, Interrupted, Layout,
+    QuantizedOperand,
+};
+use abws::softfloat::quant::{quantize, Quantizer, Rne, Rtz};
+use abws::softfloat::{FpFormat, Rounding, Tensor};
+use abws::util::Pcg64;
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Every GEMM configuration axis the kernel monomorphizes over.
+fn configs() -> Vec<GemmConfig> {
+    let mut cfgs = Vec::new();
+    for mode in [Rounding::NearestEven, Rounding::TowardZero] {
+        for chunk in [None, Some(64), Some(7)] {
+            let mut cfg = GemmConfig::paper(8, chunk);
+            cfg.mode = mode;
+            cfgs.push(cfg);
+        }
+    }
+    // Identity formats (the fast path) with and without chunking — the
+    // chunked identity config must NOT take the plain-f64 fast path.
+    cfgs.push(GemmConfig::baseline());
+    let mut chunked_ident = GemmConfig::baseline();
+    chunked_ident.chunk = Some(16);
+    cfgs.push(chunked_ident);
+    cfgs
+}
+
+#[test]
+fn kernel_is_bit_identical_to_reference_at_every_thread_count() {
+    let mut rng = Pcg64::seeded(80);
+    let a = Tensor::randn(&[13, 257], 1.0, &mut rng);
+    let b = Tensor::randn(&[257, 9], 1.0, &mut rng);
+    for cfg in configs() {
+        let want = bits(&rp_gemm_ref(&a, &b, &cfg));
+        for threads in [1usize, 2, 4] {
+            let ctx = GemmCtx {
+                threads,
+                deadline: None,
+            };
+            let got = rp_gemm_ex(&a, &b, &cfg, Layout::NN, &ctx).unwrap();
+            assert_eq!(bits(&got), want, "threads={threads} cfg={cfg:?}");
+        }
+    }
+}
+
+#[test]
+fn layouts_are_bit_identical_to_materialized_transposes() {
+    let mut rng = Pcg64::seeded(81);
+    let a = Tensor::randn(&[6, 70], 1.0, &mut rng);
+    let b = Tensor::randn(&[70, 5], 1.0, &mut rng);
+    let a_t = a.t(); // [70, 6] — what a TN caller holds
+    let b_t = b.t(); // [5, 70] — what an NT caller holds
+    for cfg in configs() {
+        let want = bits(&rp_gemm_ref(&a, &b, &cfg));
+        for threads in [1usize, 2, 4] {
+            let ctx = GemmCtx {
+                threads,
+                deadline: None,
+            };
+            let nt = rp_gemm_ex(&a, &b_t, &cfg, Layout::NT, &ctx).unwrap();
+            assert_eq!(bits(&nt), want, "NT threads={threads} cfg={cfg:?}");
+            let tn = rp_gemm_ex(&a_t, &b, &cfg, Layout::TN, &ctx).unwrap();
+            assert_eq!(bits(&tn), want, "TN threads={threads} cfg={cfg:?}");
+        }
+    }
+}
+
+#[test]
+fn edge_shapes_k_zero_and_one_by_one() {
+    for cfg in configs() {
+        // k = 0: the empty accumulation — all-zero [m, n] output.
+        let a = Tensor::zeros(&[3, 0]);
+        let b = Tensor::zeros(&[0, 2]);
+        for threads in [1usize, 2, 4] {
+            let ctx = GemmCtx {
+                threads,
+                deadline: None,
+            };
+            let out = rp_gemm_ex(&a, &b, &cfg, Layout::NN, &ctx).unwrap();
+            assert_eq!(out.shape, vec![3, 2]);
+            assert!(out.data.iter().all(|&x| x == 0.0), "cfg={cfg:?}");
+        }
+        // 1×1×1: one product, one accumulator rounding.
+        let a = Tensor::from_vec(&[1, 1], vec![0.37]);
+        let b = Tensor::from_vec(&[1, 1], vec![-0.81]);
+        let want = bits(&rp_gemm_ref(&a, &b, &cfg));
+        for threads in [1usize, 2, 4] {
+            let ctx = GemmCtx {
+                threads,
+                deadline: None,
+            };
+            let out = rp_gemm_ex(&a, &b, &cfg, Layout::NN, &ctx).unwrap();
+            assert_eq!(bits(&out), want, "cfg={cfg:?}");
+        }
+    }
+}
+
+#[test]
+fn packed_operands_match_unpacked_entry_point() {
+    let mut rng = Pcg64::seeded(82);
+    let x = Tensor::randn(&[10, 33], 1.0, &mut rng);
+    let w = Tensor::randn(&[33, 4], 1.0, &mut rng);
+    let ctx = GemmCtx::default();
+    for cfg in configs() {
+        let xq = QuantizedOperand::for_cfg(&x, &cfg);
+        let wq = QuantizedOperand::for_cfg(&w, &cfg);
+        assert!(xq.matches(&cfg) && wq.matches(&cfg));
+        let packed = rp_gemm_packed(&xq, &wq, &cfg, Layout::NN, &ctx).unwrap();
+        let fresh = rp_gemm_ex(&x, &w, &cfg, Layout::NN, &ctx).unwrap();
+        assert_eq!(bits(&packed), bits(&fresh), "cfg={cfg:?}");
+        // The same pack serves the transposed read (the trainer's W2
+        // FWD/BWD sharing): Aᵀ·B via TN against the reference on Aᵀ.
+        let via_tn = rp_gemm_packed(&xq, &xq, &cfg, Layout::TN, &ctx).unwrap();
+        let want = bits(&rp_gemm_ref(&x.t(), &x, &cfg));
+        assert_eq!(bits(&via_tn), want, "cfg={cfg:?}");
+    }
+}
+
+#[test]
+fn deadline_interrupts_between_row_panels() {
+    let mut rng = Pcg64::seeded(83);
+    let a = Tensor::randn(&[16, 128], 1.0, &mut rng);
+    let b = Tensor::randn(&[128, 16], 1.0, &mut rng);
+    let ctx = GemmCtx {
+        threads: 2,
+        deadline: Some(std::time::Instant::now() - std::time::Duration::from_millis(1)),
+    };
+    let r = rp_gemm_ex(&a, &b, &GemmConfig::paper(8, Some(64)), Layout::NN, &ctx);
+    assert_eq!(r.err(), Some(Interrupted));
+}
+
+/// Property sweep: the monomorphized fused quantize path
+/// (`Quantizer::quantize_m::<R>`, what the kernel's inner loop calls)
+/// must match the free `quantize` bit-for-bit over exponents spanning
+/// the flush-to-zero range, target subnormals, normals, and overflow
+/// saturation — for every format class the GEMM uses.
+#[test]
+fn fused_quantize_matches_free_quantize_across_ranges() {
+    let formats = [
+        FpFormat::FP8_152,         // representation (1,5,2)
+        FpFormat::PROD_FP8,        // product (1,6,5)
+        FpFormat::accumulator(4),  // narrow accumulator
+        FpFormat::accumulator(12), // wide accumulator
+        FpFormat::new(11, 52),     // identity (f64-wide)
+    ];
+    let mut rng = Pcg64::seeded(84);
+    for fmt in formats {
+        let rne = Quantizer::new(fmt, Rounding::NearestEven);
+        let rtz = Quantizer::new(fmt, Rounding::TowardZero);
+        for _ in 0..20_000 {
+            // Scale a unit normal by 2^[-40, 40): FP8_152 flushes below
+            // ~2^-20 and saturates above 2^15·1.75, so the sweep crosses
+            // flush, subnormal, normal, and overflow regions of every
+            // format above.
+            let v = rng.normal() * (2f64).powi(rng.next_below(80) as i32 - 40);
+            let want_rne = quantize(v, fmt, Rounding::NearestEven);
+            let want_rtz = quantize(v, fmt, Rounding::TowardZero);
+            assert_eq!(
+                rne.quantize_m::<Rne>(v).to_bits(),
+                want_rne.to_bits(),
+                "RNE fmt={fmt:?} v={v:e}"
+            );
+            assert_eq!(
+                rtz.quantize_m::<Rtz>(v).to_bits(),
+                want_rtz.to_bits(),
+                "RTZ fmt={fmt:?} v={v:e}"
+            );
+        }
+        // Specials pass through both paths identically.
+        for v in [0.0, -0.0, f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            let got = rne.quantize_m::<Rne>(v);
+            let want = quantize(v, fmt, Rounding::NearestEven);
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+    }
+}

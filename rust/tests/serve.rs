@@ -214,6 +214,33 @@ fn deadline_degrades_to_structured_timeout_error() {
     assert_eq!(ok.get("id").and_then(Json::as_str), Some("ok"));
 }
 
+/// The deadline must fire *inside* a long GEMM, not just between steps:
+/// this run has exactly one step, so the trainer's pre-step check passes
+/// (the deadline is still in the future when step 0 starts) and only the
+/// GEMM kernel's between-row-panel poll can stop it. Without in-GEMM
+/// cancellation the single step runs to completion and the reply carries
+/// no error — so a plain `timeout` assertion pins the behaviour.
+#[test]
+fn deadline_fires_inside_a_single_long_gemm_step() {
+    // [32,1024]·[1024,1024] at m_acc=8: tens of millions of fused
+    // quantize-MACs — far beyond the 30 ms budget on any machine.
+    let input = "{\"type\":\"train\",\"plan\":{\"kind\":\"uniform\",\"m_acc\":8},\
+                 \"dim\":1024,\"classes\":4,\"hidden\":1024,\"steps\":1,\
+                 \"batch\":32,\"n_train\":64,\"n_test\":8,\"id\":\"g\"}\n";
+    let pooled = ServeOptions {
+        workers: 1,
+        queue_depth: 8,
+        timeout_ms: Some(30),
+    };
+    let (out, stats) = run(input, &pooled);
+    assert_eq!(stats.requests, 1);
+    assert_eq!(stats.timeouts, 1, "deadline must interrupt the in-flight GEMM");
+    let j = Json::parse(out.lines().next().unwrap()).unwrap();
+    let err = j.get("error").expect("timed-out train carries an error");
+    assert_eq!(err.get("kind").and_then(Json::as_str), Some("timeout"));
+    assert_eq!(j.get("id").and_then(Json::as_str), Some("g"));
+}
+
 /// The v1 envelope: missing `"v"` means v1, explicit `"v":1` is
 /// accepted, and an unknown version is a structured `invalid` error that
 /// still echoes the request id.
