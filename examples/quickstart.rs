@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
     // 3. Trust but verify: measure the variance retention empirically
     //    with the bit-accurate reduced-precision simulator.
     for m in [plain - 2, plain] {
-        let r = empirical_vrr(&McConfig::new(n, m).with_trials(64));
+        let r = empirical_vrr(&McConfig::new(n, m).with_trials(64))?;
         println!(
             "measured VRR at m_acc={m}: {:.4} (theory {:.4})",
             r.vrr,

@@ -46,8 +46,11 @@ fn main() {
         let mut cfg = McConfig::new(*n_grad, m_acc)
             .with_trials(48)
             .with_seed(9 + *idx as u64);
-        cfg.threads = 2; // fixed: thread count feeds the RNG stream split
-        let r = empirical_vrr(&cfg);
+        // Per-trial RNG streams make the result bit-identical at any
+        // thread count; 2 engine participants per sweep slot just keeps
+        // the 8-way outer sweep from oversubscribing the pool.
+        cfg.threads = 2;
+        let r = empirical_vrr(&cfg).expect("48 trials, n_grad >= 1");
         (*idx, group.clone(), *n_grad, r)
     });
 

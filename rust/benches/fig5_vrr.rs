@@ -9,7 +9,8 @@
 //! ln 50 ≈ 3.91) because v itself overflows past the knee.
 
 use abws::coordinator::experiment::{ExperimentResult, ResultSink};
-use abws::coordinator::sweep::run_sweep;
+use abws::coordinator::sweep::{default_threads, run_sweep};
+use abws::mc::{sweep_vrr, AccumSetup, Ensemble};
 use abws::util::bench;
 use abws::util::json::Json;
 use abws::vrr::chunking::vrr_chunked_total;
@@ -141,6 +142,58 @@ fn main() {
             ("flat_octaves", Json::from(flat)),
         ]);
     }
+
+    // ---- (c) empirical overlay --------------------------------------------
+    // Measure the first panel-(c) setup with the bit-accurate simulator:
+    // every chunk size plus the unchunked dashed line in ONE engine
+    // sweep, all scored against the same drawn ensemble.
+    let (n, m) = setups[0];
+    let mut chunks = Vec::new();
+    let mut c = 2usize;
+    while c <= n / 2 {
+        chunks.push(c);
+        c *= 4; // coarser than the theory curve: this one runs the simulator
+    }
+    let mut grid: Vec<AccumSetup> =
+        chunks.iter().map(|&c| AccumSetup::new(m).with_chunk(c)).collect();
+    grid.push(AccumSetup::new(m));
+    let ens = Ensemble {
+        n,
+        m_p: 5,
+        e_acc: 6,
+        sigma_p: 1.0,
+        trials: 24,
+        seed: 0x5eed,
+        threads: default_threads(),
+    };
+    let measured = sweep_vrr(&ens, &grid).expect("24 trials, non-empty grid");
+    println!(
+        "\nFig 5(c) empirical overlay: n=2^{} m_acc={m}, 24-trial Monte-Carlo \
+         (one engine sweep, shared ensemble)",
+        n.trailing_zeros()
+    );
+    for (c, r) in chunks.iter().zip(&measured) {
+        println!(
+            "    chunk {c:>7}: theory {:.5}  measured {:.5}",
+            vrr_chunked_total(m, 5, n, *c),
+            r.vrr
+        );
+        result.push_row(&[
+            ("panel", Json::from("c_empirical")),
+            ("n", Json::from(n)),
+            ("m_acc", Json::from(m)),
+            ("chunk", Json::from(*c)),
+            ("vrr_theory", Json::from(vrr_chunked_total(m, 5, n, *c))),
+            ("vrr_measured", Json::from(r.vrr)),
+        ]);
+    }
+    let plain_measured = measured.last().expect("unchunked baseline");
+    println!(
+        "    {:>12}: theory {:.5}  measured {:.5}",
+        "no chunking",
+        vrr(m, 5, n),
+        plain_measured.vrr
+    );
 
     // Timing of a full panel-(a) sweep.
     bench::header();

@@ -9,6 +9,11 @@
 //!   the run aborts if any thread count's hash differs from 1-thread
 //!   (the bit-identity contract, enforced in CI);
 //! * a full Monte-Carlo VRR point;
+//! * the sweep-vectorized Monte-Carlo engine: a 10-config
+//!   `(m_acc, chunk, rounding)` grid at 1/2/4 pool threads, reporting
+//!   terms/s, an FNV-1a hash of every result's bits (the run aborts if
+//!   any thread count diverges from the `empirical_vrr_ref` oracle), and
+//!   the speedup over looping single-config `empirical_vrr` calls;
 //! * telemetry overhead: the memoized sweep with recording off vs on;
 //! * serve throughput: a 200-line advisor batch through the pooled
 //!   pipeline at 1 / 2 / 4 workers.
@@ -22,14 +27,17 @@
 //! PRs.
 //!
 //! `--only <phase>` runs a single phase (solver, cache, softfloat, gemm,
-//! gemm_kernel, mc, serve) — CI uses this to smoke the GEMM kernel in
-//! release mode without paying for the full suite.
+//! gemm_kernel, mc, mc_engine, serve) — CI uses this to smoke the GEMM
+//! and MC-engine kernels in release mode without paying for the full
+//! suite.
 
 use std::time::Duration;
 
 use abws::api::cache::SolveCache;
 use abws::api::{serve_with, ServeOptions};
-use abws::mc::{empirical_vrr, McConfig};
+use abws::mc::{
+    empirical_vrr, empirical_vrr_ref, sweep_vrr, AccumSetup, Ensemble, McConfig, McResult,
+};
 use abws::nets::alexnet::alexnet_imagenet;
 use abws::nets::nzr::NzrModel;
 use abws::nets::predict::{predict_network, predict_network_with};
@@ -65,6 +73,23 @@ fn fnv1a(data: &[f32]) -> u64 {
         for byte in x.to_bits().to_le_bytes() {
             h ^= byte as u64;
             h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// FNV-1a over the f64 bit patterns of every Monte-Carlo result's
+/// `(var_swamping, var_ideal, vrr)` triple, in grid order — the hash the
+/// CI smoke compares between the engine sweep and the
+/// `empirical_vrr_ref` oracle at every thread count.
+fn mc_result_hash(results: &[McResult]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for r in results {
+        for v in [r.var_swamping, r.var_ideal, r.vrr] {
+            for byte in v.to_bits().to_le_bytes() {
+                h ^= byte as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
         }
     }
     h
@@ -284,9 +309,113 @@ fn main() {
         let mut mc = McConfig::new(16_384, 8).with_trials(32);
         mc.threads = 4;
         results.push(bench("empirical_vrr n=16k t=32", Duration::from_secs(2), || {
-            std::hint::black_box(empirical_vrr(&mc))
+            std::hint::black_box(empirical_vrr(&mc).expect("mc bench config is valid"))
         }));
         phases.close("mc");
+    }
+
+    // --- sweep-vectorized Monte-Carlo engine: threads sweep + oracle hash ------
+    // A Fig.5-shaped grid — four widths, plain and chunk-64, plus two
+    // truncating configs — scored in one engine pass per arm. Every arm's
+    // result hash MUST equal the single-config `empirical_vrr_ref` oracle
+    // hash (bit-identity contract at any thread count); any divergence
+    // aborts the run so CI fails. The looped arm runs the same grid as
+    // ten one-config `empirical_vrr` calls — the sweep's advantage is one
+    // draw-and-quantize ensemble pass instead of ten.
+    let mut mc_engine: Option<Json> = None;
+    if run_phase("mc_engine") {
+        let (n, trials, seed) = (4096usize, 32usize, 0x5eedu64);
+        let mut grid: Vec<AccumSetup> = Vec::new();
+        for m in [5u32, 7, 9, 11] {
+            grid.push(AccumSetup::new(m));
+            grid.push(AccumSetup::new(m).with_chunk(64));
+        }
+        grid.push(AccumSetup::new(7).with_rounding(Rounding::TowardZero));
+        grid.push(
+            AccumSetup::new(7)
+                .with_chunk(64)
+                .with_rounding(Rounding::TowardZero),
+        );
+        let as_config = |s: &AccumSetup| {
+            let mut cfg = McConfig::new(n, s.m_acc)
+                .with_trials(trials)
+                .with_seed(seed)
+                .with_rounding(s.rounding);
+            if let Some(c) = s.chunk {
+                cfg = cfg.with_chunk(c);
+            }
+            cfg.threads = 4;
+            cfg
+        };
+
+        let ref_results: Vec<McResult> =
+            grid.iter().map(|s| empirical_vrr_ref(&as_config(s))).collect();
+        let ref_hash = mc_result_hash(&ref_results);
+        println!("  -> empirical_vrr_ref oracle hash {ref_hash:016x}");
+
+        let terms_total = (trials * n) as f64;
+        let mut out_json = Json::obj();
+        out_json.set("grid_width", grid.len());
+        out_json.set("ref_hash", format!("{ref_hash:016x}"));
+        let mut engine4_median = f64::MAX;
+        for threads in [1usize, 2, 4] {
+            let ens = Ensemble {
+                n,
+                m_p: 5,
+                e_acc: 6,
+                sigma_p: 1.0,
+                trials,
+                seed,
+                threads,
+            };
+            let got = sweep_vrr(&ens, &grid).expect("bench grid is valid");
+            let hash = mc_result_hash(&got);
+            if hash != ref_hash {
+                eprintln!(
+                    "FATAL: engine sweep hash {hash:016x} at {threads} thread(s) \
+                     diverged from the empirical_vrr_ref oracle hash {ref_hash:016x}"
+                );
+                std::process::exit(1);
+            }
+            let meas = bench(
+                &format!("mc engine sweep x{} n=4k t=32, {threads} thr", grid.len()),
+                budget,
+                || std::hint::black_box(sweep_vrr(&ens, &grid).expect("bench grid is valid")),
+            );
+            let rate = terms_total / meas.median.as_secs_f64().max(1e-12);
+            println!(
+                "  -> {threads} thread(s): {:.1}M terms/s, result hash {hash:016x}",
+                rate / 1e6
+            );
+            if threads == 4 {
+                engine4_median = meas.median.as_secs_f64();
+            }
+            let mut arm = Json::obj();
+            arm.set("median_ns", meas.median.as_nanos() as u64);
+            arm.set("terms_per_sec", rate);
+            arm.set("hash", format!("{hash:016x}"));
+            out_json.set(&format!("threads_{threads}"), arm);
+            results.push(meas);
+        }
+
+        let looped = bench(
+            &format!("mc looped empirical_vrr x{}, 4 thr", grid.len()),
+            budget,
+            || {
+                for s in &grid {
+                    std::hint::black_box(
+                        empirical_vrr(&as_config(s)).expect("bench grid is valid"),
+                    );
+                }
+            },
+        );
+        let speedup = looped.median.as_secs_f64() / engine4_median.max(1e-12);
+        println!("  -> engine sweep vs looped single-config calls at 4 threads: {speedup:.2}x");
+        out_json.set("looped_median_ns", looped.median.as_nanos() as u64);
+        out_json.set("sweep_speedup_vs_looped", speedup);
+        results.push(looped);
+        mc_engine = Some(out_json);
+        phases.close("mc_engine");
     }
 
     // --- serve pipeline throughput ---------------------------------------------
@@ -350,6 +479,9 @@ fn main() {
     }
     if let Some(gk) = gemm_kernel {
         root.set("gemm_kernel", gk);
+    }
+    if let Some(me) = mc_engine {
+        root.set("mc_engine", me);
     }
 
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_perf.json");

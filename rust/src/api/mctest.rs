@@ -1,0 +1,346 @@
+//! `test` requests: empirical Monte-Carlo VRR measurement over a sweep
+//! of accumulator widths.
+//!
+//! Where [`super::check`] answers from the closed-form theory, `test`
+//! actually *runs* the bit-accurate simulator: draw an ensemble of
+//! reduced-precision accumulations and measure the variance retention at
+//! every requested `m_acc` — the experiment behind Fig. 5. The whole
+//! width sweep goes through one [`crate::mc::engine::sweep_vrr`] call,
+//! so the ensemble is drawn once and shared across all sweep points, and
+//! each measured value is bit-identical to a single-config run with the
+//! same seed.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::sweep::default_threads;
+use crate::mc::engine::{sweep_vrr, AccumSetup, Ensemble};
+use crate::softfloat::quant::Rounding;
+use crate::util::json::Json;
+use crate::vrr::chunking::vrr_chunked_total;
+use crate::vrr::theorem::vrr as vrr_theory;
+
+/// Ceilings that keep one serve line from monopolizing the process: a
+/// full request is at most `trials * n * len(m_accs)` accumulation steps.
+const MAX_TRIALS: usize = 4_096;
+const MAX_N: usize = 1 << 22;
+const MAX_WIDTHS: usize = 64;
+
+/// One empirical sweep request: measure the VRR of each width in
+/// `m_accs` for a length-`n` accumulation, all against the same drawn
+/// ensemble.
+#[derive(Clone, Debug)]
+pub struct TestRequest {
+    /// Accumulation length.
+    pub n: usize,
+    /// Accumulator mantissa widths to sweep (grid order is reply order).
+    pub m_accs: Vec<u32>,
+    /// Product mantissa bits (terms are drawn pre-rounded to this).
+    pub m_p: u32,
+    /// Chunk size shared by every sweep point (`None` = plain).
+    pub chunk: Option<usize>,
+    /// Accumulation rounding mode shared by every sweep point.
+    pub rounding: Rounding,
+    /// Ensemble size.
+    pub trials: usize,
+    pub seed: u64,
+}
+
+impl TestRequest {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("type", "test");
+        j.set("n", self.n);
+        j.set(
+            "m_accs",
+            Json::Arr(self.m_accs.iter().map(|&m| Json::from(m)).collect()),
+        );
+        j.set("m_p", self.m_p);
+        j.set("chunk", self.chunk.map(Json::from).unwrap_or(Json::Null));
+        j.set(
+            "rounding",
+            match self.rounding {
+                Rounding::NearestEven => "nearest_even",
+                Rounding::TowardZero => "toward_zero",
+            },
+        );
+        j.set("trials", self.trials);
+        j.set("seed", self.seed);
+        j
+    }
+
+    /// Parse the wire form. `n` is required; widths come from `m_accs`
+    /// (array) or a scalar `m_acc`, one of which is required;
+    /// type-mismatched fields are errors, never silent defaults.
+    pub fn from_json(j: &Json) -> Result<TestRequest> {
+        let n = super::opt_num(j, "n")?.context("test request needs 'n'")? as usize;
+        let m_accs: Vec<u32> = match (j.get("m_accs"), j.get("m_acc")) {
+            (Some(Json::Arr(items)), _) => items
+                .iter()
+                .map(|v| {
+                    v.as_f64()
+                        .map(|f| f as u32)
+                        .with_context(|| format!("'m_accs' entries must be numbers, got {v}"))
+                })
+                .collect::<Result<_>>()?,
+            (Some(other), _) => bail!("'m_accs' must be an array, got {other}"),
+            (None, Some(_)) => vec![super::opt_num(j, "m_acc")?
+                .context("'m_acc' must be a number")? as u32],
+            (None, None) => bail!("test request needs 'm_accs' (array) or 'm_acc'"),
+        };
+        let m_p = super::opt_num(j, "m_p")?.map(|v| v as u32).unwrap_or(5);
+        let chunk = super::opt_num(j, "chunk")?.map(|v| v as usize);
+        let rounding = match j.get("rounding") {
+            None | Some(Json::Null) => Rounding::NearestEven,
+            Some(r) => match r.as_str() {
+                Some("nearest_even") => Rounding::NearestEven,
+                Some("toward_zero") => Rounding::TowardZero,
+                _ => bail!("unknown rounding {r} (nearest_even|toward_zero)"),
+            },
+        };
+        let trials = super::opt_num(j, "trials")?.map(|v| v as usize).unwrap_or(64);
+        let seed = super::opt_num(j, "seed")?.map(|v| v as u64).unwrap_or(0x5eed);
+        Ok(TestRequest {
+            n,
+            m_accs,
+            m_p,
+            chunk,
+            rounding,
+            trials,
+            seed,
+        })
+    }
+
+    /// Validate and run the sweep on the shared worker pool.
+    pub fn run(&self) -> Result<TestReport> {
+        ensure!(!self.m_accs.is_empty(), "test request needs at least one accumulator width");
+        ensure!(
+            self.m_accs.len() <= MAX_WIDTHS,
+            "at most {MAX_WIDTHS} accumulator widths per test request, got {}",
+            self.m_accs.len()
+        );
+        for &m in &self.m_accs {
+            ensure!((1..=52).contains(&m), "m_acc must be in 1..=52, got {m}");
+        }
+        ensure!(
+            (1..=52).contains(&self.m_p),
+            "m_p must be in 1..=52, got {}",
+            self.m_p
+        );
+        ensure!(self.n <= MAX_N, "n must be at most {MAX_N}, got {}", self.n);
+        ensure!(
+            self.trials <= MAX_TRIALS,
+            "trials must be at most {MAX_TRIALS}, got {}",
+            self.trials
+        );
+        if let Some(c) = self.chunk {
+            ensure!(c >= 1, "chunk must be at least 1");
+            ensure!(c <= self.n, "chunk {c} exceeds accumulation length {}", self.n);
+        }
+        // `trials < 2` / `n == 0` come back as structured McErrors; the
+        // blanket From turns them into the serve error line.
+        let ens = Ensemble {
+            n: self.n,
+            m_p: self.m_p,
+            e_acc: 6,
+            sigma_p: 1.0,
+            trials: self.trials,
+            seed: self.seed,
+            threads: default_threads(),
+        };
+        let grid: Vec<AccumSetup> = self
+            .m_accs
+            .iter()
+            .map(|&m| {
+                let s = AccumSetup::new(m).with_rounding(self.rounding);
+                match self.chunk {
+                    Some(c) => s.with_chunk(c),
+                    None => s,
+                }
+            })
+            .collect();
+        let measured = sweep_vrr(&ens, &grid)?;
+        let points = self
+            .m_accs
+            .iter()
+            .zip(&measured)
+            .map(|(&m_acc, r)| TestPoint {
+                m_acc,
+                theory: match self.chunk {
+                    Some(c) => vrr_chunked_total(m_acc, self.m_p, self.n, c),
+                    None => vrr_theory(m_acc, self.m_p, self.n),
+                },
+                measured: r.vrr,
+                var_swamping: r.var_swamping,
+                var_ideal: r.var_ideal,
+            })
+            .collect();
+        Ok(TestReport {
+            n: self.n,
+            m_p: self.m_p,
+            chunk: self.chunk,
+            rounding: self.rounding,
+            trials: self.trials,
+            seed: self.seed,
+            points,
+        })
+    }
+}
+
+/// One measured sweep point.
+#[derive(Clone, Copy, Debug)]
+pub struct TestPoint {
+    pub m_acc: u32,
+    /// Closed-form VRR (Theorem 1 / Corollary 1) for comparison.
+    pub theory: f64,
+    /// Monte-Carlo measured VRR.
+    pub measured: f64,
+    pub var_swamping: f64,
+    pub var_ideal: f64,
+}
+
+/// The empirical sweep answer: the request echoed back plus one measured
+/// point per requested width, in request order.
+#[derive(Clone, Debug)]
+pub struct TestReport {
+    pub n: usize,
+    pub m_p: u32,
+    pub chunk: Option<usize>,
+    pub rounding: Rounding,
+    pub trials: usize,
+    pub seed: u64,
+    pub points: Vec<TestPoint>,
+}
+
+/// JSON has no Inf/NaN; degrade to null (the chunked-VRR closed form can
+/// overflow for tiny widths).
+fn finite(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+impl TestReport {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("type", "test_report");
+        j.set("n", self.n);
+        j.set("m_p", self.m_p);
+        j.set("chunk", self.chunk.map(Json::from).unwrap_or(Json::Null));
+        j.set(
+            "rounding",
+            match self.rounding {
+                Rounding::NearestEven => "nearest_even",
+                Rounding::TowardZero => "toward_zero",
+            },
+        );
+        j.set("trials", self.trials);
+        j.set("seed", self.seed);
+        let points = self
+            .points
+            .iter()
+            .map(|p| {
+                let mut o = Json::obj();
+                o.set("m_acc", p.m_acc);
+                o.set("theory", finite(p.theory));
+                o.set("measured", finite(p.measured));
+                o.set("var_swamping", finite(p.var_swamping));
+                o.set("var_ideal", finite(p.var_ideal));
+                o
+            })
+            .collect::<Vec<_>>();
+        j.set("points", Json::Arr(points));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> Result<TestRequest> {
+        TestRequest::from_json(&Json::parse(text).unwrap())
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let req = parse(
+            r#"{"type":"test","n":2048,"m_accs":[5,8,12],"chunk":64,
+                "rounding":"toward_zero","trials":32,"seed":9}"#,
+        )
+        .unwrap();
+        assert_eq!(req.n, 2048);
+        assert_eq!(req.m_accs, vec![5, 8, 12]);
+        assert_eq!(req.chunk, Some(64));
+        assert_eq!(req.rounding, Rounding::TowardZero);
+        assert_eq!(req.trials, 32);
+        let text = req.to_json().to_string();
+        let back = parse(&text).unwrap();
+        assert_eq!(back.to_json().to_string(), text);
+    }
+
+    #[test]
+    fn scalar_m_acc_is_a_one_point_sweep() {
+        let req = parse(r#"{"type":"test","n":256,"m_acc":8}"#).unwrap();
+        assert_eq!(req.m_accs, vec![8]);
+        assert_eq!(req.trials, 64);
+        assert_eq!(req.rounding, Rounding::NearestEven);
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        assert!(parse(r#"{"type":"test","m_acc":8}"#).is_err()); // no n
+        assert!(parse(r#"{"type":"test","n":256}"#).is_err()); // no widths
+        assert!(parse(r#"{"type":"test","n":256,"m_accs":7}"#).is_err());
+        assert!(parse(r#"{"type":"test","n":256,"m_accs":["x"]}"#).is_err());
+        assert!(parse(r#"{"type":"test","n":256,"m_acc":8,"rounding":"up"}"#).is_err());
+        assert!(parse(r#"{"type":"test","n":"big","m_acc":8}"#).is_err());
+    }
+
+    #[test]
+    fn run_rejects_out_of_range() {
+        let base = parse(r#"{"type":"test","n":256,"m_acc":8,"trials":8}"#).unwrap();
+        let mut r = base.clone();
+        r.m_accs = vec![0];
+        assert!(r.run().is_err());
+        let mut r = base.clone();
+        r.m_accs.clear();
+        assert!(r.run().is_err());
+        let mut r = base.clone();
+        r.trials = MAX_TRIALS + 1;
+        assert!(r.run().is_err());
+        let mut r = base.clone();
+        r.chunk = Some(1024); // > n
+        assert!(r.run().is_err());
+        // Structured engine errors surface through run() too.
+        let mut r = base.clone();
+        r.trials = 1;
+        assert!(r.run().unwrap_err().to_string().contains("at least 2"));
+        let mut r = base;
+        r.n = 0;
+        assert!(r.run().is_err());
+    }
+
+    #[test]
+    fn sweep_matches_single_config_oracle() {
+        let req = parse(
+            r#"{"type":"test","n":1024,"m_accs":[5,9],"chunk":32,"trials":24,"seed":3}"#,
+        )
+        .unwrap();
+        let report = req.run().unwrap();
+        assert_eq!(report.points.len(), 2);
+        for p in &report.points {
+            let want = crate::mc::empirical_vrr_ref(
+                &crate::mc::McConfig::new(1024, p.m_acc)
+                    .with_chunk(32)
+                    .with_trials(24)
+                    .with_seed(3),
+            );
+            assert_eq!(p.measured.to_bits(), want.vrr.to_bits());
+        }
+        let j = report.to_json();
+        assert_eq!(j.get("type").unwrap().as_str(), Some("test_report"));
+        assert_eq!(j.get("points").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

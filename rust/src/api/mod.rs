@@ -16,6 +16,10 @@
 //! * [`CheckRequest`] → [`CheckReport`](check::CheckReport) (in
 //!   [`check`]) — pointwise suitability queries: minimum `m_acc` for one
 //!   accumulation, plus suitability/VRR of a proposed width.
+//! * [`TestRequest`] → [`TestReport`](mctest::TestReport) (in
+//!   [`mctest`]) — empirical Monte-Carlo VRR sweeps over accumulator
+//!   widths, run through the sweep-vectorized `mc::engine` so one drawn
+//!   ensemble serves every width.
 //! * [`cache`] — the memoized VRR solve cache all API queries share, so
 //!   repeated `min_m_acc` sweeps stop re-running the O(n) crossing sums.
 //! * [`error`] — the unified [`ApiError`]/[`ErrorKind`] failure shape
@@ -38,6 +42,7 @@ pub mod advisor;
 pub mod cache;
 pub mod check;
 pub mod error;
+pub mod mctest;
 pub mod policy;
 pub mod serve;
 pub mod train;
@@ -45,6 +50,7 @@ pub mod train;
 pub use advisor::{advise_builtin, builtin_keys, AdvisorReport, AdvisorRequest, NetworkSpec};
 pub use check::{CheckReport, CheckRequest};
 pub use error::{ApiError, ErrorKind};
+pub use mctest::{TestReport, TestRequest};
 pub use policy::{baseline_plan, fp8_ideal_acc_plan, PrecisionPolicy, PrecisionPolicyBuilder};
 pub use serve::{default_workers, serve, serve_with, ServeOptions, ServeStats};
 pub use train::{PlanSpec, TrainReport, TrainRequest};

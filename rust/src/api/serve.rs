@@ -5,7 +5,9 @@
 //! ## The v1 envelope
 //!
 //! Each input line is a JSON object whose `"type"` selects the handler —
-//! `"advisor"` (the default when omitted), `"train"`, or `"check"`. Two
+//! `"advisor"` (the default when omitted), `"train"`, `"check"`, or
+//! `"test"` (empirical Monte-Carlo VRR sweeps on the shared worker
+//! pool). Two
 //! optional envelope fields ride along: `"v"` (protocol version; missing
 //! means v1, anything other than 1 is a structured error) and `"id"`
 //! (any JSON value, echoed back verbatim in the matching reply or error
@@ -57,6 +59,7 @@ use anyhow::{Context, Result};
 use super::advisor::AdvisorRequest;
 use super::check::CheckRequest;
 use super::error::{ApiError, ErrorKind};
+use super::mctest::TestRequest;
 use super::train::TrainRequest;
 use crate::telemetry::{self, labeled, Counter, Gauge, Histogram, Timer};
 use crate::util::json::Json;
@@ -119,8 +122,8 @@ pub fn default_workers() -> usize {
 }
 
 /// Request-type labels used by `abws_serve_requests_total{type=...}`.
-/// Hidden test-only request types (`__panic`, `__sleep`) collapse to
-/// `test` to keep label cardinality bounded.
+/// Hidden test-only request types (`__panic`, `__sleep`) collapse into
+/// the `test` label to keep its cardinality bounded.
 const REQUEST_TYPES: [&str; 6] = ["advisor", "train", "check", "test", "unknown", "invalid"];
 
 /// A parsed v1 request envelope: the body, the correlation id to echo,
@@ -174,7 +177,7 @@ fn label_for(ty: &str) -> &'static str {
         "advisor" => "advisor",
         "train" => "train",
         "check" => "check",
-        "__panic" | "__sleep" => "test",
+        "test" | "__panic" | "__sleep" => "test",
         _ => "unknown",
     }
 }
@@ -199,6 +202,14 @@ fn run_train(j: &Json, deadline: Option<Instant>) -> Result<Json, ApiError> {
 
 fn run_check(j: &Json) -> Result<Json, ApiError> {
     let req = CheckRequest::from_json(j).map_err(invalid)?;
+    let report = req.run().map_err(invalid)?;
+    Ok(report.to_json())
+}
+
+fn run_test(j: &Json) -> Result<Json, ApiError> {
+    let req = TestRequest::from_json(j).map_err(invalid)?;
+    // Structured engine rejections (trials < 2, n == 0, …) surface here
+    // as the unified `{"error":{...}}` shape, kind `invalid`.
     let report = req.run().map_err(invalid)?;
     Ok(report.to_json())
 }
@@ -239,13 +250,14 @@ fn dispatch(env: &Envelope, deadline: Option<Instant>) -> Result<Json, ApiError>
         "advisor" => run_advisor(&env.body),
         "train" => run_train(&env.body, deadline),
         "check" => run_check(&env.body),
+        "test" => run_test(&env.body),
         // Hidden test-only handlers (integration tests can't see
         // cfg(test) items, so these are always compiled but
         // undocumented).
         "__panic" => panic!("injected panic from the hidden '__panic' test request"),
         "__sleep" => run_sleep(&env.body, deadline),
         other => Err(ApiError::invalid(format!(
-            "unknown request type '{other}' (advisor|train|check)"
+            "unknown request type '{other}' (advisor|train|check|test)"
         ))),
     }
 }
@@ -667,6 +679,36 @@ mod tests {
     }
 
     #[test]
+    fn test_line_answers_with_measured_sweep() {
+        let out = handle_request(r#"{"type":"test","n":512,"m_accs":[6,12],"trials":16}"#).unwrap();
+        assert_eq!(out.get("type").unwrap().as_str(), Some("test_report"));
+        let points = out.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(points.len(), 2);
+        assert!(points[0].get("measured").unwrap().as_f64().is_some());
+    }
+
+    /// Satellite requirement: a degenerate ensemble used to come back as
+    /// a silent NaN VRR — it must now be a structured error line.
+    #[test]
+    fn degenerate_test_request_is_a_structured_error_line() {
+        let input = "{\"type\":\"test\",\"n\":64,\"m_acc\":8,\"trials\":1,\"id\":\"deg\"}\n";
+        let mut out = Vec::new();
+        let stats = serve(input.as_bytes(), &mut out).unwrap();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.errors, 1);
+        let err = Json::parse(String::from_utf8(out).unwrap().lines().next().unwrap()).unwrap();
+        let obj = err.get("error").unwrap();
+        assert_eq!(obj.get("kind").unwrap().as_str(), Some("invalid"));
+        assert!(obj
+            .get("message")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("at least 2"));
+        assert_eq!(err.get("id").unwrap().as_str(), Some("deg"));
+    }
+
+    #[test]
     fn errors_are_lines_not_failures() {
         let input = "{\"network\":\"resnet32\"}\nnot json\n\n{\"network\":\"resnet18\"}\n";
         let mut out = Vec::new();
@@ -727,6 +769,10 @@ mod tests {
         assert_eq!(handle_line(r#"{"network":"resnet32"}"#, None).ty, "advisor");
         assert_eq!(handle_line(r#"{"type":"train"}"#, None).ty, "train");
         assert_eq!(handle_line(r#"{"type":"check","n":64}"#, None).ty, "check");
+        assert_eq!(
+            handle_line(r#"{"type":"test","n":64,"m_acc":8,"trials":4}"#, None).ty,
+            "test"
+        );
         assert_eq!(handle_line(r#"{"type":"__panic"}"#, None).ty, "test");
     }
 

@@ -3,6 +3,7 @@
 //! ```text
 //! abws predict [--net all|resnet32|resnet18|alexnet] [--chunk 64] [--mp 5]
 //! abws vrr --macc 12 --n 4096 [--mp 5] [--chunk 64] [--nzr 0.5]
+//!          [--empirical [--maccs 5,8,12] [--trials 96] [--seed S]]
 //! abws area
 //! abws mc [--n 16384] [--maccs 5,6,8] [--trials 256] [--chunk 64]
 //! abws train [--mode native|aot] [--macc 12 | --pp -1] [--chunk 64]
@@ -58,6 +59,8 @@ pub fn run(args: Args) -> Result<()> {
 const USAGE: &str = "usage: abws <predict|vrr|area|mc|train|serve|metrics|list|info> [options]
   predict  — Table 1: per-layer-group accumulation precision predictions
   vrr      — evaluate VRR / v(n) for one accumulation setup
+             (--empirical measures it with the Monte-Carlo engine instead:
+              --maccs sweeps several widths against one drawn ensemble)
   area     — Fig 1b: FPU area model ladder
   mc       — Monte-Carlo validation of the VRR formulas
   train    — reduced-precision training run (native bit-accurate or AOT/PJRT)
@@ -105,7 +108,73 @@ fn cmd_predict(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `abws vrr --empirical`: measure the VRR with the sweep-vectorized
+/// Monte-Carlo engine instead of evaluating the closed form — every
+/// width in `--maccs` is scored against the *same* drawn ensemble in one
+/// engine pass, next to its Theorem 1 / Corollary 1 prediction.
+fn cmd_vrr_empirical(args: &Args) -> Result<()> {
+    use crate::coordinator::sweep::default_threads;
+    use crate::mc::{sweep_vrr, AccumSetup, Ensemble};
+
+    let m_accs = args.get_u32_list("maccs", &[args.get_u32("macc", 12)]);
+    for &m in &m_accs {
+        ensure!((1..=52).contains(&m), "--maccs entries must be in 1..=52, got {m}");
+    }
+    let n = args.get_usize("n", 4096);
+    let m_p = args.get_u32("mp", 5);
+    let chunk = parse_chunk(args)?;
+    if let Some(c) = chunk {
+        ensure!(c <= n, "--chunk {c} exceeds --n {n}");
+    }
+    let trials = args.get_usize("trials", 96);
+    let seed = args.get_i64("seed", 0x5eed) as u64;
+    ensure!(
+        args.get("nzr").is_none(),
+        "--empirical draws a dense ensemble; --nzr applies to the closed-form path only"
+    );
+    let ens = Ensemble {
+        n,
+        m_p,
+        e_acc: 6,
+        sigma_p: 1.0,
+        trials,
+        seed,
+        threads: default_threads(),
+    };
+    let grid: Vec<AccumSetup> = m_accs
+        .iter()
+        .map(|&m| {
+            let s = AccumSetup::new(m);
+            match chunk {
+                Some(c) => s.with_chunk(c),
+                None => s,
+            }
+        })
+        .collect();
+    let results = sweep_vrr(&ens, &grid)?;
+    println!(
+        "empirical VRR (n={n}, m_p={m_p}, chunk={}, trials={trials}, seed={seed}):",
+        chunk.map(|c| c.to_string()).unwrap_or("-".into())
+    );
+    println!("{:>6} {:>9} {:>9} {:>8}", "m_acc", "theory", "measured", "|err|");
+    for (&m, r) in m_accs.iter().zip(&results) {
+        let theory = match chunk {
+            Some(c) => vrr::chunking::vrr_chunked_total(m, m_p, n, c),
+            None => vrr::theorem::vrr(m, m_p, n),
+        };
+        println!(
+            "{m:>6} {theory:>9.4} {:>9.4} {:>8.4}",
+            r.vrr,
+            (theory - r.vrr).abs()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_vrr(args: &Args) -> Result<()> {
+    if args.flag("empirical") {
+        return cmd_vrr_empirical(args);
+    }
     let m_acc = args.get_u32("macc", 12);
     ensure!(
         (1..=52).contains(&m_acc),
@@ -158,7 +227,7 @@ fn cmd_mc(args: &Args) -> Result<()> {
     let trials = args.get_usize("trials", 256);
     let chunk = parse_chunk(args)?;
     let seed = args.get_i64("seed", 0x5eed) as u64;
-    let pts = validate::validate_grid(&maccs, &[n], chunk, trials, seed);
+    let pts = validate::validate_grid(&maccs, &[n], chunk, trials, seed)?;
     print!("{}", validate::render(&pts));
     Ok(())
 }
@@ -354,7 +423,7 @@ fn exercise_stack() -> Result<()> {
     api::advise_builtin("resnet32", &policy)?;
     let mut mc = crate::mc::sim::McConfig::new(512, 8).with_trials(8);
     mc.threads = 2;
-    crate::mc::sim::empirical_vrr(&mc);
+    crate::mc::sim::empirical_vrr(&mc)?;
     let train = TrainRequest {
         plan: PlanSpec::Uniform { m_acc: 10 },
         dim: 32,
@@ -448,6 +517,26 @@ mod tests {
         assert!(cmd_vrr(&args(&["vrr", "--macc", "53"])).is_err());
         // chunk larger than n is rejected by checked_accum_spec.
         assert!(cmd_vrr(&args(&["vrr", "--n", "32", "--chunk", "64"])).is_err());
+    }
+
+    #[test]
+    fn vrr_empirical_sweeps_and_validates() {
+        assert!(cmd_vrr(&args(&[
+            "vrr",
+            "--empirical",
+            "--n",
+            "256",
+            "--trials",
+            "8",
+            "--maccs",
+            "6,12",
+        ]))
+        .is_ok());
+        // Engine-level rejection (trials < 2) surfaces as a CLI error.
+        assert!(cmd_vrr(&args(&["vrr", "--empirical", "--n", "64", "--trials", "1"])).is_err());
+        assert!(cmd_vrr(&args(&["vrr", "--empirical", "--nzr", "0.5"])).is_err());
+        assert!(cmd_vrr(&args(&["vrr", "--empirical", "--maccs", "0,5"])).is_err());
+        assert!(cmd_vrr(&args(&["vrr", "--empirical", "--n", "32", "--chunk", "64"])).is_err());
     }
 
     #[test]

@@ -1,0 +1,395 @@
+//! Sweep-vectorized Monte-Carlo VRR engine on the shared worker pool.
+//!
+//! The paper's analysis is a *sweep*: Fig. 5 re-measures the VRR at every
+//! candidate `(m_acc, chunk)` point, and every caller of
+//! [`super::sim::empirical_vrr`] (the `abws vrr --empirical` and `abws mc`
+//! sweeps, the fig3/fig5 benches, serve `test` requests) loops that same
+//! experiment over a grid. Per point, the expensive part is not the
+//! reduced-precision accumulation — it is *drawing* the ensemble: one
+//! Box–Muller normal plus one product quantization per term. This engine
+//! evaluates the whole grid against the **same drawn terms**: one RNG +
+//! product-quantize pass per trial, amortized across every sweep point,
+//! with each configuration's accumulation running through a sum kernel
+//! resolved once per config (monomorphized per `(RoundMode, chunked)`,
+//! identity fast path included — the same once-per-panel resolution the
+//! GEMM kernel does).
+//!
+//! Trials run on the persistent [`crate::runtime::pool`] instead of
+//! spawning `thread::scope` workers per call; each pool participant keeps
+//! one terms buffer alive across all the trials it claims.
+//!
+//! ## Determinism argument
+//!
+//! The result is bit-identical to the retained single-config oracle
+//! [`super::sim::empirical_vrr_ref`] at **any** thread count:
+//!
+//! 1. Trial `i` always draws from PCG stream `i + 1` of `seed`, so the
+//!    terms of a trial do not depend on which participant runs it.
+//! 2. Participants write each trial's `(reduced…, exact)` samples into
+//!    that trial's disjoint slot of one preallocated buffer — no shared
+//!    accumulator is touched inside the parallel region.
+//! 3. The streaming [`Welford`] moments are computed *after* the join, on
+//!    the caller, by pushing samples in global trial order. (Welford
+//!    `merge` is not bitwise-equivalent to sequential `push`, so per
+//!    worker partial moments would break bit-identity; buffering samples
+//!    per trial makes any work partition safe.)
+//!
+//! The work split itself (an atomic trial index) can vary freely between
+//! runs — nothing downstream observes it.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::runtime::pool;
+use crate::softfloat::accumulate::{chunked_sum_q, exact_sum, sequential_sum_q};
+use crate::softfloat::format::FpFormat;
+use crate::softfloat::quant::{Quantizer, Rne, RoundMode, Rounding, Rtz};
+use crate::telemetry::{self, Timer};
+use crate::util::rng::Pcg64;
+use crate::util::stats::Welford;
+
+use super::sim::McResult;
+
+/// The shared half of a sweep: everything that determines the *drawn
+/// ensemble* (terms and trial structure), independent of how the terms
+/// are then accumulated.
+#[derive(Clone, Copy, Debug)]
+pub struct Ensemble {
+    /// Accumulation length.
+    pub n: usize,
+    /// Product mantissa bits (products are drawn pre-rounded to this).
+    pub m_p: u32,
+    /// Exponent bits of the accumulator formats (paper: 6).
+    pub e_acc: u32,
+    /// Product standard deviation σ_p.
+    pub sigma_p: f64,
+    /// Number of independent accumulations in the ensemble.
+    pub trials: usize,
+    pub seed: u64,
+    /// Pool participants (the caller plus `threads - 1` pool workers).
+    pub threads: usize,
+}
+
+/// One sweep point: how the shared terms are accumulated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AccumSetup {
+    /// Accumulator mantissa bits.
+    pub m_acc: u32,
+    /// Chunk size (`None` = plain sequential accumulation).
+    pub chunk: Option<usize>,
+    /// Rounding mode of the accumulation.
+    pub rounding: Rounding,
+}
+
+impl AccumSetup {
+    pub fn new(m_acc: u32) -> AccumSetup {
+        AccumSetup {
+            m_acc,
+            chunk: None,
+            rounding: Rounding::NearestEven,
+        }
+    }
+
+    pub fn with_chunk(mut self, chunk: usize) -> AccumSetup {
+        self.chunk = Some(chunk);
+        self
+    }
+
+    pub fn with_rounding(mut self, rounding: Rounding) -> AccumSetup {
+        self.rounding = rounding;
+        self
+    }
+}
+
+/// Structured rejection of a degenerate Monte-Carlo request. The old
+/// `empirical_vrr` silently divided 0/0 on `trials < 2` and returned a
+/// NaN VRR; the engine refuses instead, and `api::serve` surfaces these
+/// as the unified `{"error":{...}}` shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum McError {
+    /// An ensemble variance needs at least two trials.
+    TooFewTrials(usize),
+    /// A length-zero accumulation has no variance to retain.
+    EmptyAccumulation,
+    /// A sweep point asked for chunk size zero.
+    ZeroChunk,
+    /// The sweep grid is empty.
+    EmptyGrid,
+}
+
+impl fmt::Display for McError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            McError::TooFewTrials(t) => write!(
+                f,
+                "Monte-Carlo ensemble needs at least 2 trials to estimate a variance, got {t}"
+            ),
+            McError::EmptyAccumulation => {
+                write!(f, "zero-length accumulation (n must be >= 1)")
+            }
+            McError::ZeroChunk => write!(f, "chunk size must be at least 1"),
+            McError::EmptyGrid => write!(f, "sweep grid must contain at least one setup"),
+        }
+    }
+}
+
+impl std::error::Error for McError {}
+
+/// One grid config's accumulation path, resolved once before the
+/// parallel region: the accumulator [`Quantizer`] (format constants
+/// precomputed), the chunk size, and a function pointer to the sum
+/// routine monomorphized for `(RoundMode, chunked)` — with the
+/// `man_bits >= 52` identity case dispatched to plain-f64 sums here, not
+/// per element (the once-per-panel resolution the GEMM kernel does).
+struct SumKernel {
+    q: Quantizer,
+    chunk: usize,
+    run: fn(&[f64], usize, &Quantizer) -> f64,
+}
+
+fn seq_kern<R: RoundMode>(terms: &[f64], _chunk: usize, q: &Quantizer) -> f64 {
+    sequential_sum_q::<R>(terms, q)
+}
+
+fn chunk_kern<R: RoundMode>(terms: &[f64], chunk: usize, q: &Quantizer) -> f64 {
+    chunked_sum_q::<R>(terms, chunk, q)
+}
+
+fn ident_seq_kern(terms: &[f64], _chunk: usize, _q: &Quantizer) -> f64 {
+    let mut s = 0.0;
+    for &p in terms {
+        s += p;
+    }
+    s
+}
+
+fn ident_chunk_kern(terms: &[f64], chunk: usize, _q: &Quantizer) -> f64 {
+    let mut inter = 0.0;
+    for block in terms.chunks(chunk) {
+        let mut intra = 0.0;
+        for &p in block {
+            intra += p;
+        }
+        inter += intra;
+    }
+    inter
+}
+
+impl SumKernel {
+    fn resolve(e_acc: u32, setup: &AccumSetup) -> SumKernel {
+        let q = Quantizer::new(FpFormat::new(e_acc, setup.m_acc), setup.rounding);
+        let (chunk, run): (usize, fn(&[f64], usize, &Quantizer) -> f64) =
+            match (setup.chunk, setup.rounding, q.is_identity()) {
+                (None, _, true) => (0, ident_seq_kern),
+                (Some(c), _, true) => (c, ident_chunk_kern),
+                (None, Rounding::NearestEven, false) => (0, seq_kern::<Rne>),
+                (None, Rounding::TowardZero, false) => (0, seq_kern::<Rtz>),
+                (Some(c), Rounding::NearestEven, false) => (c, chunk_kern::<Rne>),
+                (Some(c), Rounding::TowardZero, false) => (c, chunk_kern::<Rtz>),
+            };
+        SumKernel { q, chunk, run }
+    }
+
+    #[inline]
+    fn sum(&self, terms: &[f64]) -> f64 {
+        (self.run)(terms, self.chunk, &self.q)
+    }
+}
+
+/// Raw base pointer into the sample buffer, shareable across pool
+/// participants. Safety rests on the trial-claim protocol: each trial
+/// index is handed out exactly once by the atomic counter, and a
+/// participant only writes the `stride` slots of trials it claimed.
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Measure the VRR of every [`AccumSetup`] in `grid` against one shared
+/// drawn ensemble, in one pass over the trials.
+///
+/// Returns one [`McResult`] per grid entry, in grid order. Each entry is
+/// bit-identical to running [`super::sim::empirical_vrr_ref`] on that
+/// single configuration (same `n`, `trials`, `seed`, …), at any
+/// `threads` value — see the module docs for the determinism argument.
+pub fn sweep_vrr(ens: &Ensemble, grid: &[AccumSetup]) -> Result<Vec<McResult>, McError> {
+    if ens.trials < 2 {
+        return Err(McError::TooFewTrials(ens.trials));
+    }
+    if ens.n == 0 {
+        return Err(McError::EmptyAccumulation);
+    }
+    if grid.is_empty() {
+        return Err(McError::EmptyGrid);
+    }
+    if grid.iter().any(|s| s.chunk == Some(0)) {
+        return Err(McError::ZeroChunk);
+    }
+
+    let run_timer = telemetry::enabled().then(Timer::start);
+    // All per-config constants resolved once, outside the trial loop.
+    let kernels: Vec<SumKernel> = grid
+        .iter()
+        .map(|s| SumKernel::resolve(ens.e_acc, s))
+        .collect();
+    let prod_q = Quantizer::new(FpFormat::new(6, ens.m_p), Rounding::NearestEven);
+
+    let width = grid.len();
+    let stride = width + 1; // per trial: one reduced sum per config + the exact sum
+    let trials = ens.trials;
+    let mut samples = vec![0.0f64; trials * stride];
+    let out = SendPtr(samples.as_mut_ptr());
+    let next = AtomicUsize::new(0);
+    let threads = ens.threads.clamp(1, trials);
+
+    let report = pool::run(threads, &|| {
+        // One terms buffer per participant, reused across every trial it
+        // claims — the trial loop allocates nothing.
+        let mut terms = vec![0.0f64; ens.n];
+        loop {
+            let trial = next.fetch_add(1, Ordering::Relaxed);
+            if trial >= trials {
+                break;
+            }
+            // One PCG stream per trial: trial `i` draws the same terms
+            // whichever participant runs it.
+            let mut rng = Pcg64::new(ens.seed, trial as u64 + 1);
+            for p in terms.iter_mut() {
+                *p = prod_q.quantize_m::<Rne>(rng.normal() * ens.sigma_p);
+            }
+            // Safety: `trial` was claimed exactly once above, so this
+            // `stride`-slot row is written by this participant only, and
+            // the buffer outlives the region (pool::run joins before
+            // returning).
+            let row = unsafe { std::slice::from_raw_parts_mut(out.0.add(trial * stride), stride) };
+            for (slot, kern) in row.iter_mut().zip(&kernels) {
+                *slot = kern.sum(&terms);
+            }
+            row[width] = exact_sum(&terms);
+        }
+    });
+
+    // Ensemble moments: sequential Welford pushes in global trial order
+    // (bit-identity contract — see the module docs; `Welford::merge`
+    // would not preserve it).
+    let mut reduced: Vec<Welford> = (0..width).map(|_| Welford::new()).collect();
+    let mut ideal = Welford::new();
+    for row in samples.chunks_exact(stride) {
+        for (w, &v) in reduced.iter_mut().zip(row.iter()) {
+            w.push(v);
+        }
+        ideal.push(row[width]);
+    }
+
+    if let Some(timer) = run_timer {
+        telemetry::counter("abws_mc_runs_total").inc();
+        telemetry::counter("abws_mc_trials_total").add(trials as u64);
+        telemetry::histogram("abws_mc_run_wall_ns").record(timer.elapsed_ns());
+        telemetry::histogram("abws_mc_engine_sweep_width").record(width as u64);
+        let terms_per_sec =
+            ((trials * ens.n) as u64).saturating_mul(1_000_000_000) / report.wall_ns.max(1);
+        telemetry::histogram("abws_mc_engine_terms_per_sec").record(terms_per_sec);
+        let util = telemetry::histogram("abws_mc_engine_worker_utilization_pct");
+        for pct in report.utilization_pct() {
+            util.record(pct);
+        }
+    }
+
+    let var_ideal = ideal.variance();
+    Ok(reduced
+        .into_iter()
+        .map(|w| {
+            let var_swamping = w.variance();
+            McResult {
+                var_swamping,
+                var_ideal,
+                vrr: var_swamping / var_ideal,
+                trials,
+            }
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ens(n: usize, trials: usize, threads: usize) -> Ensemble {
+        Ensemble {
+            n,
+            m_p: 5,
+            e_acc: 6,
+            sigma_p: 1.0,
+            trials,
+            seed: 0x5eed,
+            threads,
+        }
+    }
+
+    #[test]
+    fn degenerate_requests_are_rejected() {
+        let grid = [AccumSetup::new(8)];
+        assert_eq!(
+            sweep_vrr(&ens(64, 1, 1), &grid),
+            Err(McError::TooFewTrials(1))
+        );
+        assert_eq!(
+            sweep_vrr(&ens(64, 0, 1), &grid),
+            Err(McError::TooFewTrials(0))
+        );
+        assert_eq!(
+            sweep_vrr(&ens(0, 16, 1), &grid),
+            Err(McError::EmptyAccumulation)
+        );
+        assert_eq!(sweep_vrr(&ens(64, 16, 1), &[]), Err(McError::EmptyGrid));
+        assert_eq!(
+            sweep_vrr(&ens(64, 16, 1), &[AccumSetup::new(8).with_chunk(0)]),
+            Err(McError::ZeroChunk)
+        );
+        let msg = McError::TooFewTrials(1).to_string();
+        assert!(msg.contains("at least 2"), "{msg}");
+    }
+
+    #[test]
+    fn sweep_results_come_back_in_grid_order() {
+        let grid = [
+            AccumSetup::new(4),
+            AccumSetup::new(20),
+            AccumSetup::new(4).with_chunk(64),
+        ];
+        let r = sweep_vrr(&ens(4096, 64, 2), &grid).unwrap();
+        assert_eq!(r.len(), 3);
+        // Wider accumulator retains more; chunking rescues the narrow one.
+        assert!(r[1].vrr > r[0].vrr);
+        assert!(r[2].vrr > r[0].vrr);
+        // The exact-sum ensemble is shared across the grid.
+        assert_eq!(r[0].var_ideal.to_bits(), r[1].var_ideal.to_bits());
+        assert_eq!(r[0].var_ideal.to_bits(), r[2].var_ideal.to_bits());
+        assert!(r.iter().all(|x| x.trials == 64));
+    }
+
+    #[test]
+    fn thread_count_does_not_change_bits() {
+        // 33 trials across 4 participants exercises an uneven split.
+        let grid = [
+            AccumSetup::new(7),
+            AccumSetup::new(7).with_chunk(16),
+            AccumSetup::new(9).with_rounding(Rounding::TowardZero),
+        ];
+        let base = sweep_vrr(&ens(1024, 33, 1), &grid).unwrap();
+        for threads in [2usize, 4, 8] {
+            let got = sweep_vrr(&ens(1024, 33, threads), &grid).unwrap();
+            for (a, b) in base.iter().zip(&got) {
+                assert_eq!(a.vrr.to_bits(), b.vrr.to_bits(), "threads={threads}");
+                assert_eq!(a.var_swamping.to_bits(), b.var_swamping.to_bits());
+                assert_eq!(a.var_ideal.to_bits(), b.var_ideal.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn identity_width_retains_everything() {
+        // m_acc = 52 resolves to the identity fast-path kernel.
+        let r = sweep_vrr(&ens(2048, 32, 2), &[AccumSetup::new(52)]).unwrap();
+        assert!((r[0].vrr - 1.0).abs() < 1e-9, "vrr={}", r[0].vrr);
+    }
+}

@@ -2,9 +2,16 @@
 //! simulator: generate ensembles of reduced-precision accumulations,
 //! measure the empirical variance retention, and compare with Theorem 1 /
 //! Corollary 1.
+//!
+//! The hot path is the sweep-vectorized [`engine`] (see `docs/mc.md`);
+//! [`empirical_vrr`] is a one-config wrapper over it, and
+//! [`empirical_vrr_ref`] retains the original scoped-thread
+//! implementation as the bit-identity oracle.
 
+pub mod engine;
 pub mod sim;
 pub mod validate;
 
-pub use sim::{empirical_vrr, McConfig, McResult};
+pub use engine::{sweep_vrr, AccumSetup, Ensemble, McError};
+pub use sim::{empirical_vrr, empirical_vrr_ref, McConfig, McResult};
 pub use validate::{validate_grid, GridPoint};

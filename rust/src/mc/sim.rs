@@ -5,15 +5,23 @@
 //! and compare the ensemble second moment of the reduced-precision result
 //! against the ensemble second moment of the exact sum of the *same*
 //! samples (paired design — removes most sampling noise from the ratio).
+//!
+//! [`empirical_vrr`] is a thin one-config wrapper around the
+//! sweep-vectorized [`super::engine`]; the original `thread::scope`
+//! implementation is retained as [`empirical_vrr_ref`], the oracle the
+//! engine's bit-identity suite (`tests/mc_engine.rs`) and the
+//! `perf_hotpath` result-hash check compare against.
 
 use std::thread;
 
-use crate::softfloat::accumulate::{chunked_sum, exact_sum, sequential_sum};
+use crate::softfloat::accumulate::{chunked_sum_ref, exact_sum, sequential_sum_ref};
 use crate::softfloat::format::FpFormat;
 use crate::softfloat::quant::{Quantizer, Rounding};
 use crate::telemetry::{self, Timer};
 use crate::util::rng::Pcg64;
 use crate::util::stats::Welford;
+
+use super::engine::{self, AccumSetup, Ensemble, McError};
 
 /// Monte-Carlo experiment configuration.
 #[derive(Clone, Copy, Debug)]
@@ -28,6 +36,9 @@ pub struct McConfig {
     pub e_acc: u32,
     /// Chunk size (`None` = plain sequential accumulation).
     pub chunk: Option<usize>,
+    /// Rounding mode of the accumulation (products are always drawn
+    /// round-to-nearest-even, per Assumption 1).
+    pub rounding: Rounding,
     /// Number of independent accumulations in the ensemble.
     pub trials: usize,
     /// Product standard deviation σ_p.
@@ -45,15 +56,21 @@ impl McConfig {
             m_p: 5,
             e_acc: 6,
             chunk: None,
+            rounding: Rounding::NearestEven,
             trials: 256,
             sigma_p: 1.0,
             seed: 0x5eed,
-            threads: thread::available_parallelism().map(|p| p.get()).unwrap_or(4),
+            threads: crate::coordinator::sweep::default_threads(),
         }
     }
 
     pub fn with_chunk(mut self, chunk: usize) -> McConfig {
         self.chunk = Some(chunk);
+        self
+    }
+
+    pub fn with_rounding(mut self, rounding: Rounding) -> McConfig {
+        self.rounding = rounding;
         self
     }
 
@@ -66,10 +83,33 @@ impl McConfig {
         self.seed = seed;
         self
     }
+
+    /// The shared-ensemble half of this config (what determines the
+    /// drawn terms), for the sweep engine.
+    pub fn ensemble(&self) -> Ensemble {
+        Ensemble {
+            n: self.n,
+            m_p: self.m_p,
+            e_acc: self.e_acc,
+            sigma_p: self.sigma_p,
+            trials: self.trials,
+            seed: self.seed,
+            threads: self.threads,
+        }
+    }
+
+    /// The accumulation half of this config (one engine sweep point).
+    pub fn setup(&self) -> AccumSetup {
+        AccumSetup {
+            m_acc: self.m_acc,
+            chunk: self.chunk,
+            rounding: self.rounding,
+        }
+    }
 }
 
 /// Monte-Carlo outcome.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct McResult {
     /// Empirical `Var(s_n)` of the reduced-precision ensemble.
     pub var_swamping: f64,
@@ -80,23 +120,33 @@ pub struct McResult {
     pub trials: usize,
 }
 
-/// Run the Monte-Carlo experiment.
+/// Run the Monte-Carlo experiment for one configuration.
 ///
-/// **Deterministic in everything but `threads`, including `threads`**:
-/// each *trial* draws from its own PCG stream (stream id = trial index),
-/// workers return their trials' sample pairs in trial order, and the
-/// Welford accumulators consume them in global trial order after the
-/// join — so the result is bit-identical no matter how the trials were
-/// split across threads.
-pub fn empirical_vrr(cfg: &McConfig) -> McResult {
-    let run_timer = telemetry::enabled().then(Timer::start);
+/// A thin wrapper over [`engine::sweep_vrr`] with a single-point grid:
+/// trials run on the persistent worker pool, and degenerate requests
+/// (`trials < 2`, `n == 0`, zero chunk) are rejected with a structured
+/// [`McError`] instead of silently returning a NaN VRR.
+///
+/// **Deterministic in everything but `threads`, including `threads`** —
+/// bit-identical to [`empirical_vrr_ref`] at any thread count (see
+/// `mc::engine`'s module docs for the argument).
+pub fn empirical_vrr(cfg: &McConfig) -> Result<McResult, McError> {
+    let mut results = engine::sweep_vrr(&cfg.ensemble(), &[cfg.setup()])?;
+    Ok(results.pop().expect("one result per grid point"))
+}
+
+/// The retained reference implementation of [`empirical_vrr`]: scoped
+/// threads spawned per call, free-`quantize` `*_ref` accumulation, and
+/// no degenerate-request guard (`trials < 2` reproduces the historical
+/// NaN). This is the oracle the engine must match bit-for-bit; it is not
+/// a hot path.
+pub fn empirical_vrr_ref(cfg: &McConfig) -> McResult {
     let worker_tput =
         telemetry::enabled().then(|| telemetry::histogram("abws_mc_worker_trials_per_sec"));
     let acc_fmt = FpFormat::new(cfg.e_acc, cfg.m_acc);
     let prod_fmt = FpFormat::new(6, cfg.m_p);
-    // Product-format constants hoisted out of the trial loop (the same
-    // precomputation the GEMM kernel does); bit-identical to the free
-    // `quantize` this replaced.
+    // Product-format constants hoisted out of the trial loop; bit-identical
+    // to the free `quantize` this replaced.
     let prod_q = Quantizer::new(prod_fmt, Rounding::NearestEven);
     let threads = cfg.threads.max(1).min(cfg.trials.max(1));
     let per = cfg.trials.div_ceil(threads);
@@ -122,8 +172,8 @@ pub fn empirical_vrr(cfg: &McConfig) -> McResult {
                         *p = prod_q.quantize(rng.normal() * cfg.sigma_p);
                     }
                     let reduced = match cfg.chunk {
-                        Some(c) => chunked_sum(&terms, c, acc_fmt, Rounding::NearestEven),
-                        None => sequential_sum(&terms, acc_fmt, Rounding::NearestEven),
+                        Some(c) => chunked_sum_ref(&terms, c, acc_fmt, cfg.rounding),
+                        None => sequential_sum_ref(&terms, acc_fmt, cfg.rounding),
                     };
                     samples.push((reduced, exact_sum(&terms)));
                 }
@@ -144,11 +194,6 @@ pub fn empirical_vrr(cfg: &McConfig) -> McResult {
         sw.push(reduced);
         id.push(exact);
     }
-    if let Some(timer) = run_timer {
-        telemetry::counter("abws_mc_runs_total").inc();
-        telemetry::counter("abws_mc_trials_total").add(sw.count());
-        telemetry::histogram("abws_mc_run_wall_ns").record(timer.elapsed_ns());
-    }
     let var_swamping = sw.variance();
     let var_ideal = id.variance();
     McResult {
@@ -165,22 +210,22 @@ mod tests {
 
     #[test]
     fn wide_accumulator_retains_everything() {
-        let r = empirical_vrr(&McConfig::new(4_096, 20).with_trials(128));
+        let r = empirical_vrr(&McConfig::new(4_096, 20).with_trials(128)).unwrap();
         assert!((r.vrr - 1.0).abs() < 0.05, "vrr={}", r.vrr);
         assert_eq!(r.trials, 128);
     }
 
     #[test]
     fn narrow_accumulator_loses_variance() {
-        let r = empirical_vrr(&McConfig::new(16_384, 5).with_trials(128));
+        let r = empirical_vrr(&McConfig::new(16_384, 5).with_trials(128)).unwrap();
         assert!(r.vrr < 0.7, "vrr={}", r.vrr);
     }
 
     #[test]
     fn ideal_variance_scales_linearly_in_n() {
         // Var(s_n) ≈ n·σ_p² under ideal accumulation (Assumption 1).
-        let r1 = empirical_vrr(&McConfig::new(1_024, 20).with_trials(256));
-        let r4 = empirical_vrr(&McConfig::new(4_096, 20).with_trials(256));
+        let r1 = empirical_vrr(&McConfig::new(1_024, 20).with_trials(256)).unwrap();
+        let r4 = empirical_vrr(&McConfig::new(4_096, 20).with_trials(256)).unwrap();
         let ratio = r4.var_ideal / r1.var_ideal;
         assert!((ratio - 4.0).abs() < 1.0, "ratio={ratio}");
     }
@@ -188,8 +233,8 @@ mod tests {
     #[test]
     fn chunking_recovers_variance() {
         let base = McConfig::new(16_384, 5).with_trials(128);
-        let plain = empirical_vrr(&base);
-        let chunked = empirical_vrr(&base.with_chunk(64));
+        let plain = empirical_vrr(&base).unwrap();
+        let chunked = empirical_vrr(&base.with_chunk(64)).unwrap();
         assert!(
             chunked.vrr > plain.vrr + 0.1,
             "chunked {} vs plain {}",
@@ -202,31 +247,29 @@ mod tests {
     fn deterministic_given_seed_and_threads() {
         let mut cfg = McConfig::new(2_048, 8).with_trials(64).with_seed(7);
         cfg.threads = 3;
-        let a = empirical_vrr(&cfg);
-        let b = empirical_vrr(&cfg);
+        let a = empirical_vrr(&cfg).unwrap();
+        let b = empirical_vrr(&cfg).unwrap();
         assert_eq!(a.vrr, b.vrr);
     }
 
-    /// Satellite requirement: per-trial PCG streams make the estimate
-    /// independent of the worker split — `threads=1` and `threads=4`
-    /// must agree to the last bit (33 trials also exercises an uneven
-    /// split: 9+9+9+6).
+    /// Per-trial PCG streams make the estimate independent of the worker
+    /// split — `threads=1` and `threads=4` must agree to the last bit
+    /// (33 trials also exercises an uneven split), and the engine-backed
+    /// wrapper must agree with the retained scoped-thread oracle.
     #[test]
-    fn bit_identical_across_thread_counts() {
+    fn bit_identical_across_thread_counts_and_to_the_oracle() {
         let base = McConfig::new(1_024, 7).with_trials(33).with_seed(42);
+        let want = empirical_vrr_ref(&base);
         let mut results = Vec::new();
         for threads in [1usize, 2, 4] {
             let mut cfg = base;
             cfg.threads = threads;
-            results.push(empirical_vrr(&cfg));
+            results.push(empirical_vrr(&cfg).unwrap());
         }
-        for r in &results[1..] {
-            assert_eq!(r.vrr.to_bits(), results[0].vrr.to_bits());
-            assert_eq!(
-                r.var_swamping.to_bits(),
-                results[0].var_swamping.to_bits()
-            );
-            assert_eq!(r.var_ideal.to_bits(), results[0].var_ideal.to_bits());
+        for r in &results {
+            assert_eq!(r.vrr.to_bits(), want.vrr.to_bits());
+            assert_eq!(r.var_swamping.to_bits(), want.var_swamping.to_bits());
+            assert_eq!(r.var_ideal.to_bits(), want.var_ideal.to_bits());
             assert_eq!(r.trials, 33);
         }
     }
@@ -235,7 +278,29 @@ mod tests {
     fn trial_split_is_exact() {
         let mut cfg = McConfig::new(128, 10).with_trials(97);
         cfg.threads = 8; // 97 not divisible by 8
-        let r = empirical_vrr(&cfg);
+        let r = empirical_vrr(&cfg).unwrap();
         assert_eq!(r.trials, 97);
+    }
+
+    #[test]
+    fn degenerate_ensemble_is_an_error_not_a_nan() {
+        let e = empirical_vrr(&McConfig::new(64, 8).with_trials(1)).unwrap_err();
+        assert_eq!(e, McError::TooFewTrials(1));
+        let e = empirical_vrr(&McConfig::new(0, 8).with_trials(16)).unwrap_err();
+        assert_eq!(e, McError::EmptyAccumulation);
+        // The oracle keeps the historical behaviour (it *is* the record
+        // of what the old path did): one trial → NaN VRR.
+        let nan = empirical_vrr_ref(&McConfig::new(64, 8).with_trials(1));
+        assert!(nan.vrr.is_nan());
+    }
+
+    #[test]
+    fn rounding_mode_feeds_through() {
+        let base = McConfig::new(8_192, 6).with_trials(96).with_seed(3);
+        let rne = empirical_vrr(&base).unwrap();
+        let rtz = empirical_vrr(&base.with_rounding(Rounding::TowardZero)).unwrap();
+        // Truncation is strictly lossier on average; same drawn terms.
+        assert_eq!(rne.var_ideal.to_bits(), rtz.var_ideal.to_bits());
+        assert!(rtz.vrr < rne.vrr + 1e-12, "rtz={} rne={}", rtz.vrr, rne.vrr);
     }
 }

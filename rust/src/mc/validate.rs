@@ -3,8 +3,15 @@
 //! measurement. This is the repository's strongest evidence that both the
 //! formula implementation *and* the bit-accurate simulator are right —
 //! they were built independently and meet in the middle.
+//!
+//! Measurements run through the sweep-vectorized [`super::engine`]: one
+//! engine pass per `n` covers every `m_acc` against the same drawn
+//! ensemble, instead of re-drawing the terms at every grid point. Because
+//! the old per-point loop reused one seed per `n` anyway, the measured
+//! values are bit-identical to what the looped `empirical_vrr` produced.
 
-use super::sim::{empirical_vrr, McConfig};
+use super::engine::{sweep_vrr, AccumSetup, Ensemble, McError};
+use crate::coordinator::sweep::default_threads;
 use crate::vrr::chunking::vrr_chunked_total;
 use crate::vrr::theorem::vrr;
 
@@ -20,25 +27,53 @@ pub struct GridPoint {
 }
 
 /// Sweep a grid of `(m_acc, n)` points, plain or chunked.
+///
+/// Output stays in `m_acc`-major order (every `n` per `m_acc`), matching
+/// the historical loop; internally the sweep is `n`-major so each drawn
+/// ensemble is shared across all accumulator widths.
 pub fn validate_grid(
     m_accs: &[u32],
     ns: &[usize],
     chunk: Option<usize>,
     trials: usize,
     seed: u64,
-) -> Vec<GridPoint> {
-    let mut out = Vec::new();
-    for &m_acc in m_accs {
-        for &n in ns {
+) -> Result<Vec<GridPoint>, McError> {
+    let grid: Vec<AccumSetup> = m_accs
+        .iter()
+        .map(|&m_acc| {
+            let s = AccumSetup::new(m_acc);
+            match chunk {
+                Some(c) => s.with_chunk(c),
+                None => s,
+            }
+        })
+        .collect();
+
+    // measured[mi][nj]
+    let mut measured: Vec<Vec<f64>> = vec![vec![0.0; ns.len()]; m_accs.len()];
+    for (nj, &n) in ns.iter().enumerate() {
+        let ens = Ensemble {
+            n,
+            m_p: 5,
+            e_acc: 6,
+            sigma_p: 1.0,
+            trials,
+            seed,
+            threads: default_threads(),
+        };
+        for (mi, r) in sweep_vrr(&ens, &grid)?.into_iter().enumerate() {
+            measured[mi][nj] = r.vrr;
+        }
+    }
+
+    let mut out = Vec::with_capacity(m_accs.len() * ns.len());
+    for (mi, &m_acc) in m_accs.iter().enumerate() {
+        for (nj, &n) in ns.iter().enumerate() {
             let theory = match chunk {
                 Some(c) => vrr_chunked_total(m_acc, 5, n, c),
                 None => vrr(m_acc, 5, n),
             };
-            let mut cfg = McConfig::new(n, m_acc).with_trials(trials).with_seed(seed);
-            if let Some(c) = chunk {
-                cfg = cfg.with_chunk(c);
-            }
-            let measured = empirical_vrr(&cfg).vrr;
+            let measured = measured[mi][nj];
             out.push(GridPoint {
                 n,
                 m_acc,
@@ -49,7 +84,7 @@ pub fn validate_grid(
             });
         }
     }
-    out
+    Ok(out)
 }
 
 /// Render the grid as an aligned text table.
@@ -83,7 +118,7 @@ mod tests {
     /// assert knee agreement and coarse numeric closeness, not equality.
     #[test]
     fn theory_and_simulation_agree_on_the_knee() {
-        let pts = validate_grid(&[6, 10], &[256, 4_096, 65_536], None, 96, 11);
+        let pts = validate_grid(&[6, 10], &[256, 4_096, 65_536], None, 96, 11).unwrap();
         for p in &pts {
             if p.theory > 0.995 {
                 assert!(
@@ -102,7 +137,7 @@ mod tests {
 
     #[test]
     fn both_monotone_in_m_acc() {
-        let pts = validate_grid(&[4, 6, 8, 12], &[8_192], None, 96, 5);
+        let pts = validate_grid(&[4, 6, 8, 12], &[8_192], None, 96, 5).unwrap();
         for w in pts.windows(2) {
             assert!(w[1].theory >= w[0].theory - 1e-9);
             // MC noise allowance on the measured side.
@@ -112,16 +147,45 @@ mod tests {
 
     #[test]
     fn chunked_grid_improves_on_plain() {
-        let plain = validate_grid(&[5], &[16_384], None, 96, 3);
-        let chunked = validate_grid(&[5], &[16_384], Some(64), 96, 3);
+        let plain = validate_grid(&[5], &[16_384], None, 96, 3).unwrap();
+        let chunked = validate_grid(&[5], &[16_384], Some(64), 96, 3).unwrap();
         assert!(chunked[0].theory > plain[0].theory);
         assert!(chunked[0].measured > plain[0].measured);
     }
 
     #[test]
     fn render_table_mentions_every_point() {
-        let pts = validate_grid(&[8], &[512, 1_024], None, 16, 1);
+        let pts = validate_grid(&[8], &[512, 1_024], None, 16, 1).unwrap();
         let text = render(&pts);
         assert!(text.contains("512") && text.contains("1024"));
+    }
+
+    #[test]
+    fn degenerate_grid_is_an_error() {
+        assert_eq!(
+            validate_grid(&[8], &[512], None, 1, 1).unwrap_err(),
+            McError::TooFewTrials(1)
+        );
+        assert_eq!(
+            validate_grid(&[], &[512], None, 16, 1).unwrap_err(),
+            McError::EmptyGrid
+        );
+    }
+
+    /// The engine sweep must reproduce the per-point loop it replaced:
+    /// same seed per `n` → same drawn terms → bitwise-equal measurements.
+    #[test]
+    fn grid_matches_looped_single_config_runs() {
+        use super::super::sim::{empirical_vrr_ref, McConfig};
+        let pts = validate_grid(&[5, 9], &[1_024, 2_048], Some(32), 48, 7).unwrap();
+        for p in &pts {
+            let want = empirical_vrr_ref(
+                &McConfig::new(p.n, p.m_acc)
+                    .with_chunk(32)
+                    .with_trials(48)
+                    .with_seed(7),
+            );
+            assert_eq!(p.measured.to_bits(), want.vrr.to_bits(), "{p:?}");
+        }
     }
 }

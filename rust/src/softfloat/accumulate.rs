@@ -1,15 +1,30 @@
 //! Accumulation algorithms under reduced precision: sequential, two-level
 //! chunked (paper §4.2, Wang et al. 2018), and pairwise (tree) reduction
 //! as a classical stable baseline, plus an exact Neumaier reference sum.
+//!
+//! The sums run on the precomputed-constant [`Quantizer`] fast path, the
+//! same machinery the parallel GEMM kernel uses: the `*_q` entry points
+//! are monomorphized per [`RoundMode`] (`Rne`/`Rtz`) so the per-element
+//! rounding dispatch disappears, the format constants are resolved once
+//! per call instead of once per element, and a target at least as wide as
+//! f64 short-circuits to the plain-f64 sum (the `man_bits >= 52` identity
+//! fast path — bit-identical because identity quantization is a
+//! pass-through). The original free-`quantize` implementations are kept
+//! verbatim as `*_ref` oracles; the `quantizer_sums_match_reference`
+//! tests below (and the `mc_engine` integration suite) pin the two paths
+//! bit-for-bit.
 
 use super::arith::RpArith;
 use super::format::FpFormat;
-use super::quant::{quantize, Rounding};
+use super::quant::{quantize, Quantizer, Rne, RoundMode, Rounding, Rtz};
 
 /// Streaming reduced-precision accumulator (the hardware register model).
+/// The accumulator-format constants are hoisted into a [`Quantizer`] at
+/// construction, so `push` pays no per-element format decoding.
 #[derive(Clone, Debug)]
 pub struct Accumulator {
     arith: RpArith,
+    acc_q: Quantizer,
     sum: f64,
     count: u64,
 }
@@ -17,6 +32,7 @@ pub struct Accumulator {
 impl Accumulator {
     pub fn new(arith: RpArith) -> Self {
         Accumulator {
+            acc_q: Quantizer::new(arith.acc, arith.mode),
             arith,
             sum: 0.0,
             count: 0,
@@ -26,7 +42,7 @@ impl Accumulator {
     /// Add one (already product-quantized) term.
     #[inline]
     pub fn push(&mut self, p: f64) {
-        self.sum = self.arith.add(self.sum, p);
+        self.sum = self.acc_q.quantize(self.sum + p);
         self.count += 1;
     }
 
@@ -37,13 +53,33 @@ impl Accumulator {
     pub fn count(&self) -> u64 {
         self.count
     }
+
+    /// The arithmetic context this accumulator simulates.
+    pub fn arith(&self) -> &RpArith {
+        &self.arith
+    }
 }
 
 /// Sequential reduced-precision sum: `s_{i} = rnd(s_{i-1} + p_i)`.
 pub fn sequential_sum(terms: &[f64], acc_fmt: FpFormat, mode: Rounding) -> f64 {
+    let q = Quantizer::new(acc_fmt, mode);
+    match mode {
+        Rounding::NearestEven => sequential_sum_q::<Rne>(terms, &q),
+        Rounding::TowardZero => sequential_sum_q::<Rtz>(terms, &q),
+    }
+}
+
+/// [`sequential_sum`] monomorphized per rounding mode on a prebuilt
+/// [`Quantizer`] — the entry point hot loops (the MC engine) call after
+/// resolving `R` once per configuration instead of once per element.
+#[inline]
+pub fn sequential_sum_q<R: RoundMode>(terms: &[f64], q: &Quantizer) -> f64 {
+    if q.is_identity() {
+        return identity_sum(terms);
+    }
     let mut s = 0.0;
     for &p in terms {
-        s = quantize(s + p, acc_fmt, mode);
+        s = q.quantize_m::<R>(s + p);
     }
     s
 }
@@ -54,11 +90,28 @@ pub fn sequential_sum(terms: &[f64], acc_fmt: FpFormat, mode: Rounding) -> f64 {
 ///
 /// A trailing partial chunk is handled naturally (shorter intra sum).
 pub fn chunked_sum(terms: &[f64], chunk: usize, acc_fmt: FpFormat, mode: Rounding) -> f64 {
+    let q = Quantizer::new(acc_fmt, mode);
+    match mode {
+        Rounding::NearestEven => chunked_sum_q::<Rne>(terms, chunk, &q),
+        Rounding::TowardZero => chunked_sum_q::<Rtz>(terms, chunk, &q),
+    }
+}
+
+/// [`chunked_sum`] monomorphized per rounding mode on a prebuilt
+/// [`Quantizer`]; see [`sequential_sum_q`].
+#[inline]
+pub fn chunked_sum_q<R: RoundMode>(terms: &[f64], chunk: usize, q: &Quantizer) -> f64 {
     assert!(chunk > 0, "chunk size must be positive");
+    if q.is_identity() {
+        return identity_chunked_sum(terms, chunk);
+    }
     let mut inter = 0.0;
     for block in terms.chunks(chunk) {
-        let intra = sequential_sum(block, acc_fmt, mode);
-        inter = quantize(inter + intra, acc_fmt, mode);
+        let mut intra = 0.0;
+        for &p in block {
+            intra = q.quantize_m::<R>(intra + p);
+        }
+        inter = q.quantize_m::<R>(inter + intra);
     }
     inter
 }
@@ -67,6 +120,76 @@ pub fn chunked_sum(terms: &[f64], chunk: usize, acc_fmt: FpFormat, mode: Roundin
 /// `O(log n)`-error algorithm, used as an ablation baseline against the
 /// paper's chunked scheme.
 pub fn pairwise_sum(terms: &[f64], acc_fmt: FpFormat, mode: Rounding) -> f64 {
+    let q = Quantizer::new(acc_fmt, mode);
+    match mode {
+        Rounding::NearestEven => pairwise_sum_q::<Rne>(terms, &q),
+        Rounding::TowardZero => pairwise_sum_q::<Rtz>(terms, &q),
+    }
+}
+
+/// [`pairwise_sum`] monomorphized per rounding mode on a prebuilt
+/// [`Quantizer`]; see [`sequential_sum_q`].
+pub fn pairwise_sum_q<R: RoundMode>(terms: &[f64], q: &Quantizer) -> f64 {
+    fn rec<R: RoundMode>(t: &[f64], q: &Quantizer) -> f64 {
+        match t.len() {
+            0 => 0.0,
+            1 => t[0],
+            n => {
+                let (a, b) = t.split_at(n / 2);
+                q.quantize_m::<R>(rec::<R>(a, q) + rec::<R>(b, q))
+            }
+        }
+    }
+    rec::<R>(terms, q)
+}
+
+/// The identity (`man_bits >= 52`) fast path of [`sequential_sum_q`]:
+/// quantization is a pass-through, so the sum is the plain left-fold in
+/// f64 — the same sequence of additions, hence bit-identical.
+#[inline]
+fn identity_sum(terms: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for &p in terms {
+        s += p;
+    }
+    s
+}
+
+/// Identity fast path of [`chunked_sum_q`]. The chunk structure still
+/// matters (f64 addition is not associative), so the two-level order is
+/// preserved; only the per-add quantization disappears.
+#[inline]
+fn identity_chunked_sum(terms: &[f64], chunk: usize) -> f64 {
+    let mut inter = 0.0;
+    for block in terms.chunks(chunk) {
+        inter += identity_sum(block);
+    }
+    inter
+}
+
+/// Reference oracle for [`sequential_sum`]: the original free-`quantize`
+/// implementation, retained verbatim for bit-identity regression tests.
+pub fn sequential_sum_ref(terms: &[f64], acc_fmt: FpFormat, mode: Rounding) -> f64 {
+    let mut s = 0.0;
+    for &p in terms {
+        s = quantize(s + p, acc_fmt, mode);
+    }
+    s
+}
+
+/// Reference oracle for [`chunked_sum`]; see [`sequential_sum_ref`].
+pub fn chunked_sum_ref(terms: &[f64], chunk: usize, acc_fmt: FpFormat, mode: Rounding) -> f64 {
+    assert!(chunk > 0, "chunk size must be positive");
+    let mut inter = 0.0;
+    for block in terms.chunks(chunk) {
+        let intra = sequential_sum_ref(block, acc_fmt, mode);
+        inter = quantize(inter + intra, acc_fmt, mode);
+    }
+    inter
+}
+
+/// Reference oracle for [`pairwise_sum`]; see [`sequential_sum_ref`].
+pub fn pairwise_sum_ref(terms: &[f64], acc_fmt: FpFormat, mode: Rounding) -> f64 {
     fn rec(t: &[f64], fmt: FpFormat, mode: Rounding) -> f64 {
         match t.len() {
             0 => 0.0,
@@ -126,6 +249,69 @@ mod tests {
         }
     }
 
+    /// The fast path vs the retained oracle, bit for bit: every
+    /// algorithm, both rounding modes, narrow through identity-wide
+    /// formats, chunk sizes that divide n and ones that leave a partial
+    /// trailing chunk.
+    #[test]
+    fn quantizer_sums_match_reference() {
+        let mut rng = Pcg64::seeded(53);
+        let terms: Vec<f64> = (0..1777).map(|_| rng.normal() * 2.0).collect();
+        for fmt in [
+            FpFormat::accumulator(4),
+            FpFormat::accumulator(8),
+            FpFormat::accumulator(14),
+            FpFormat::new(11, 52), // identity fast path
+        ] {
+            for mode in [Rounding::NearestEven, Rounding::TowardZero] {
+                assert_eq!(
+                    sequential_sum(&terms, fmt, mode).to_bits(),
+                    sequential_sum_ref(&terms, fmt, mode).to_bits(),
+                    "sequential fmt={fmt:?} mode={mode:?}"
+                );
+                for chunk in [1usize, 7, 64, 2048] {
+                    assert_eq!(
+                        chunked_sum(&terms, chunk, fmt, mode).to_bits(),
+                        chunked_sum_ref(&terms, chunk, fmt, mode).to_bits(),
+                        "chunked fmt={fmt:?} mode={mode:?} chunk={chunk}"
+                    );
+                }
+                assert_eq!(
+                    pairwise_sum(&terms, fmt, mode).to_bits(),
+                    pairwise_sum_ref(&terms, fmt, mode).to_bits(),
+                    "pairwise fmt={fmt:?} mode={mode:?}"
+                );
+            }
+        }
+    }
+
+    /// The monomorphized `*_q` entry points (what the MC engine calls
+    /// after per-config resolution) agree with the dynamic-mode wrappers.
+    #[test]
+    fn monomorphized_entry_points_match_wrappers() {
+        let mut rng = Pcg64::seeded(54);
+        let terms: Vec<f64> = (0..513).map(|_| rng.normal()).collect();
+        let fmt = FpFormat::accumulator(7);
+        let rne = Quantizer::new(fmt, Rounding::NearestEven);
+        let rtz = Quantizer::new(fmt, Rounding::TowardZero);
+        assert_eq!(
+            sequential_sum_q::<Rne>(&terms, &rne).to_bits(),
+            sequential_sum(&terms, fmt, Rounding::NearestEven).to_bits()
+        );
+        assert_eq!(
+            sequential_sum_q::<Rtz>(&terms, &rtz).to_bits(),
+            sequential_sum(&terms, fmt, Rounding::TowardZero).to_bits()
+        );
+        assert_eq!(
+            chunked_sum_q::<Rne>(&terms, 32, &rne).to_bits(),
+            chunked_sum(&terms, 32, fmt, Rounding::NearestEven).to_bits()
+        );
+        assert_eq!(
+            pairwise_sum_q::<Rtz>(&terms, &rtz).to_bits(),
+            pairwise_sum(&terms, fmt, Rounding::TowardZero).to_bits()
+        );
+    }
+
     #[test]
     fn sequential_swamps_long_positive_sums() {
         // Summing n ones with m_acc=4: once s reaches 2^5=32, adding 1.0
@@ -178,6 +364,7 @@ mod tests {
             sequential_sum(&terms, FpFormat::accumulator(7), MODE)
         );
         assert_eq!(acc.count(), 777);
+        assert_eq!(acc.arith().acc, FpFormat::accumulator(7));
     }
 
     #[test]

@@ -1,0 +1,238 @@
+//! Bit-identity regression suite for the sweep-vectorized Monte-Carlo
+//! VRR engine (ISSUE 9 acceptance): every grid point of a `sweep_vrr`
+//! call must bit-match a single-config run of the retained scoped-thread
+//! oracle `empirical_vrr_ref` — at 1/2/4 pool threads, under uneven
+//! trial splits, for chunked, truncating, and identity-width configs —
+//! and the one-config `empirical_vrr` wrapper must agree with both.
+//! Plus a PCG-driven property sweep (in the style of `tests/gemm.rs`)
+//! pinning the monomorphized accumulate fast paths against the
+//! free-`quantize` `*_ref` sums bit-for-bit.
+
+use abws::mc::{
+    empirical_vrr, empirical_vrr_ref, sweep_vrr, AccumSetup, Ensemble, McConfig, McError,
+};
+use abws::softfloat::accumulate::{
+    chunked_sum, chunked_sum_ref, pairwise_sum, pairwise_sum_ref, sequential_sum,
+    sequential_sum_ref,
+};
+use abws::softfloat::{FpFormat, Rounding};
+use abws::util::Pcg64;
+
+/// The sweep grid every test scores: plain, chunked (even and ragged),
+/// truncating, and the `man_bits >= 52` identity fast path.
+fn grid() -> Vec<AccumSetup> {
+    vec![
+        AccumSetup::new(5),
+        AccumSetup::new(8),
+        AccumSetup::new(5).with_chunk(64),
+        AccumSetup::new(5).with_chunk(7), // ragged tail chunks
+        AccumSetup::new(8).with_rounding(Rounding::TowardZero),
+        AccumSetup::new(8)
+            .with_chunk(32)
+            .with_rounding(Rounding::TowardZero),
+        AccumSetup::new(52), // identity kernel
+        AccumSetup::new(52).with_chunk(16),
+    ]
+}
+
+fn config_for(setup: &AccumSetup, n: usize, trials: usize, seed: u64, threads: usize) -> McConfig {
+    let mut cfg = McConfig::new(n, setup.m_acc)
+        .with_trials(trials)
+        .with_seed(seed)
+        .with_rounding(setup.rounding);
+    if let Some(c) = setup.chunk {
+        cfg = cfg.with_chunk(c);
+    }
+    cfg.threads = threads;
+    cfg
+}
+
+/// The headline contract: every sweep point equals the retained oracle,
+/// bit for bit, at every thread count — including 33 trials over 4
+/// participants (uneven split) and more threads than trials.
+#[test]
+fn sweep_bit_matches_the_oracle_at_every_thread_count() {
+    let grid = grid();
+    let (n, trials, seed) = (1_024usize, 33usize, 42u64);
+    // Oracle thread count is irrelevant to the bits; use 2 to also cover
+    // its own split path.
+    let want: Vec<_> = grid
+        .iter()
+        .map(|s| empirical_vrr_ref(&config_for(s, n, trials, seed, 2)))
+        .collect();
+    for threads in [1usize, 2, 4, 64] {
+        let ens = Ensemble {
+            n,
+            m_p: 5,
+            e_acc: 6,
+            sigma_p: 1.0,
+            trials,
+            seed,
+            threads,
+        };
+        let got = sweep_vrr(&ens, &grid).unwrap();
+        assert_eq!(got.len(), grid.len());
+        for ((setup, w), g) in grid.iter().zip(&want).zip(&got) {
+            assert_eq!(
+                g.var_swamping.to_bits(),
+                w.var_swamping.to_bits(),
+                "threads={threads} setup={setup:?}"
+            );
+            assert_eq!(g.var_ideal.to_bits(), w.var_ideal.to_bits());
+            assert_eq!(g.vrr.to_bits(), w.vrr.to_bits());
+            assert_eq!(g.trials, trials);
+        }
+    }
+}
+
+/// The one-config wrapper is literally a width-1 sweep.
+#[test]
+fn wrapper_agrees_with_sweep_and_oracle() {
+    for setup in grid() {
+        let cfg = config_for(&setup, 512, 17, 7, 3);
+        let via_wrapper = empirical_vrr(&cfg).unwrap();
+        let via_oracle = empirical_vrr_ref(&cfg);
+        assert_eq!(
+            via_wrapper.vrr.to_bits(),
+            via_oracle.vrr.to_bits(),
+            "{setup:?}"
+        );
+        assert_eq!(
+            via_wrapper.var_swamping.to_bits(),
+            via_oracle.var_swamping.to_bits()
+        );
+        assert_eq!(
+            via_wrapper.var_ideal.to_bits(),
+            via_oracle.var_ideal.to_bits()
+        );
+    }
+}
+
+/// Degenerate requests come back as structured errors, not NaN results.
+#[test]
+fn degenerate_requests_are_structured_errors() {
+    let ens = |n: usize, trials: usize| Ensemble {
+        n,
+        m_p: 5,
+        e_acc: 6,
+        sigma_p: 1.0,
+        trials,
+        seed: 1,
+        threads: 1,
+    };
+    let g = [AccumSetup::new(8)];
+    assert_eq!(sweep_vrr(&ens(64, 1), &g), Err(McError::TooFewTrials(1)));
+    assert_eq!(sweep_vrr(&ens(64, 0), &g), Err(McError::TooFewTrials(0)));
+    assert_eq!(sweep_vrr(&ens(0, 16), &g), Err(McError::EmptyAccumulation));
+    assert_eq!(sweep_vrr(&ens(64, 16), &[]), Err(McError::EmptyGrid));
+    assert_eq!(
+        sweep_vrr(&ens(64, 16), &[AccumSetup::new(8).with_chunk(0)]),
+        Err(McError::ZeroChunk)
+    );
+    // Two trials is the smallest legal ensemble.
+    assert!(sweep_vrr(&ens(64, 2), &g).is_ok());
+}
+
+/// Trial counts far from a multiple of the thread count still cover
+/// every trial exactly once (97 over 8 participants).
+#[test]
+fn uneven_trial_splits_are_exact() {
+    let g = [AccumSetup::new(9), AccumSetup::new(9).with_chunk(5)];
+    let base = sweep_vrr(
+        &Ensemble {
+            n: 128,
+            m_p: 5,
+            e_acc: 6,
+            sigma_p: 1.0,
+            trials: 97,
+            seed: 13,
+            threads: 1,
+        },
+        &g,
+    )
+    .unwrap();
+    let split = sweep_vrr(
+        &Ensemble {
+            n: 128,
+            m_p: 5,
+            e_acc: 6,
+            sigma_p: 1.0,
+            trials: 97,
+            seed: 13,
+            threads: 8,
+        },
+        &g,
+    )
+    .unwrap();
+    for (a, b) in base.iter().zip(&split) {
+        assert_eq!(a.trials, 97);
+        assert_eq!(a.vrr.to_bits(), b.vrr.to_bits());
+    }
+}
+
+/// PCG property sweep over the accumulate layer itself: the
+/// monomorphized precomputed-constant fast paths must equal the
+/// free-`quantize` reference sums bit-for-bit across formats, modes,
+/// chunk sizes, and magnitude ranges (subnormal → overflow), mirroring
+/// the fused-quantize sweep in `tests/gemm.rs`.
+#[test]
+fn accumulate_fast_paths_bit_match_reference_sums() {
+    let mut rng = Pcg64::seeded(0xACC);
+    let formats = [
+        FpFormat::accumulator(4),
+        FpFormat::accumulator(9),
+        FpFormat::accumulator(14),
+        FpFormat::new(11, 52), // identity fast path
+    ];
+    for &scale in &[1e-30f64, 1e-3, 1.0, 1e3, 1e30] {
+        let terms: Vec<f64> = (0..2_048).map(|_| rng.normal() * scale).collect();
+        for fmt in formats {
+            for mode in [Rounding::NearestEven, Rounding::TowardZero] {
+                assert_eq!(
+                    sequential_sum(&terms, fmt, mode).to_bits(),
+                    sequential_sum_ref(&terms, fmt, mode).to_bits(),
+                    "sequential {fmt:?} {mode:?} scale={scale}"
+                );
+                assert_eq!(
+                    pairwise_sum(&terms, fmt, mode).to_bits(),
+                    pairwise_sum_ref(&terms, fmt, mode).to_bits(),
+                    "pairwise {fmt:?} {mode:?} scale={scale}"
+                );
+                for chunk in [1usize, 7, 64, 4096] {
+                    assert_eq!(
+                        chunked_sum(&terms, chunk, fmt, mode).to_bits(),
+                        chunked_sum_ref(&terms, chunk, fmt, mode).to_bits(),
+                        "chunked c={chunk} {fmt:?} {mode:?} scale={scale}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Grid order is reply order, and the shared ideal ensemble is bitwise
+/// identical across every grid entry.
+#[test]
+fn results_are_in_grid_order_with_one_shared_ideal() {
+    let grid = grid();
+    let r = sweep_vrr(
+        &Ensemble {
+            n: 2_048,
+            m_p: 5,
+            e_acc: 6,
+            sigma_p: 1.0,
+            trials: 24,
+            seed: 5,
+            threads: 4,
+        },
+        &grid,
+    )
+    .unwrap();
+    for x in &r {
+        assert_eq!(x.var_ideal.to_bits(), r[0].var_ideal.to_bits());
+    }
+    // grid[1] (m_acc 8) retains more than grid[0] (m_acc 5); the
+    // identity entry retains essentially everything.
+    assert!(r[1].vrr > r[0].vrr);
+    assert!((r[6].vrr - 1.0).abs() < 1e-9);
+}

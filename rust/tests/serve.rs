@@ -268,6 +268,47 @@ fn envelope_versions_gate_requests() {
     assert!(msg.contains("v1"), "error should name the supported version: {msg}");
 }
 
+/// The `test` request type runs a real Monte-Carlo sweep through the
+/// pooled pipeline (one engine sweep per line, measured next to the
+/// theory prediction per width), and a degenerate ensemble degrades to
+/// a structured `invalid` error line in its slot — not a NaN report.
+#[test]
+fn test_requests_measure_and_degenerate_ones_error() {
+    let input = "{\"type\":\"test\",\"n\":512,\"m_accs\":[6,12],\"trials\":16,\"id\":\"m\"}\n\
+                 {\"type\":\"test\",\"n\":512,\"m_acc\":8,\"trials\":1,\"id\":\"bad\"}\n\
+                 {\"type\":\"check\",\"n\":256,\"id\":\"ok\"}\n";
+    let (out, stats) = run(input, &opts(2));
+    assert_eq!(stats.requests, 3);
+    assert_eq!(stats.errors, 1);
+    assert_eq!(stats.panics, 0);
+
+    let lines: Vec<&str> = out.lines().collect();
+    assert_eq!(lines.len(), 3);
+
+    let report = Json::parse(lines[0]).unwrap();
+    assert!(report.get("error").is_none(), "{}", lines[0]);
+    assert_eq!(report.get("type").and_then(Json::as_str), Some("test_report"));
+    assert_eq!(report.get("id").and_then(Json::as_str), Some("m"));
+    let points = report.get("points").and_then(Json::as_arr).unwrap();
+    assert_eq!(points.len(), 2, "one point per requested width");
+    let vrr = |p: &Json| p.get("measured").and_then(Json::as_f64).unwrap();
+    assert!(
+        vrr(&points[1]) > vrr(&points[0]),
+        "wider accumulator must retain more: {}",
+        lines[0]
+    );
+
+    let bad = Json::parse(lines[1]).unwrap();
+    let err = bad.get("error").expect("degenerate ensemble is an error");
+    assert_eq!(err.get("kind").and_then(Json::as_str), Some("invalid"));
+    assert_eq!(bad.get("id").and_then(Json::as_str), Some("bad"));
+    let msg = err.get("message").and_then(Json::as_str).unwrap();
+    assert!(msg.contains("at least 2"), "{msg}");
+
+    let ok = Json::parse(lines[2]).unwrap();
+    assert!(ok.get("error").is_none());
+}
+
 /// `workers: 0` resolves to the detected parallelism rather than a
 /// zero-thread deadlock.
 #[test]
