@@ -15,6 +15,10 @@
 //!   any thread count diverges from the `empirical_vrr_ref` oracle), and
 //!   the speedup over looping single-config `empirical_vrr` calls;
 //! * telemetry overhead: the memoized sweep with recording off vs on;
+//! * tracing overhead: the GEMM kernel with span instrumentation
+//!   compiled in, measured disabled twice (the repeat delta bounds the
+//!   noise floor — the disabled branch is one relaxed load) and enabled
+//!   once; the acceptance criterion is <= 2% on the disabled path;
 //! * serve throughput: a 200-line advisor batch through the pooled
 //!   pipeline at 1 / 2 / 4 workers.
 //!
@@ -27,9 +31,9 @@
 //! PRs.
 //!
 //! `--only <phase>` runs a single phase (solver, cache, softfloat, gemm,
-//! gemm_kernel, mc, mc_engine, serve) — CI uses this to smoke the GEMM
-//! and MC-engine kernels in release mode without paying for the full
-//! suite.
+//! gemm_kernel, mc, mc_engine, trace, serve) — CI uses this to smoke the
+//! GEMM and MC-engine kernels in release mode without paying for the
+//! full suite.
 
 use std::time::Duration;
 
@@ -268,7 +272,7 @@ fn main() {
         for threads in [1usize, 2, 4] {
             let ctx = GemmCtx {
                 threads,
-                deadline: None,
+                ..GemmCtx::default()
             };
             let out = rp_gemm_ex(&a, &b, &kcfg, Layout::NN, &ctx).unwrap();
             let hash = fnv1a(&out.data);
@@ -418,6 +422,55 @@ fn main() {
         phases.close("mc_engine");
     }
 
+    // --- tracing overhead: GEMM with spans compiled in, disabled vs on ---------
+    // The span callsites ship in the product binary; the acceptance
+    // criterion is that with tracing *disabled* (the default) they cost
+    // <= 2% GEMM throughput. Two disabled runs bound the measurement
+    // noise — the disabled branch is a single relaxed load — and the
+    // enabled run prices actual span recording for reference.
+    let mut trace_overhead: Option<Json> = None;
+    if run_phase("trace") {
+        let mut rng = Pcg64::seeded(23);
+        let (m, k, n) = (16usize, 2048usize, 16usize);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let tcfg = GemmConfig::paper(8, Some(64));
+        let ctx = GemmCtx {
+            threads: 1,
+            ..GemmCtx::default()
+        };
+        let run = || std::hint::black_box(rp_gemm_ex(&a, &b, &tcfg, Layout::NN, &ctx).unwrap());
+        telemetry::trace::set_enabled(false);
+        let off_a = bench("rp_gemm_ex 16x2048x16, trace off (a)", budget, run);
+        let off_b = bench("rp_gemm_ex 16x2048x16, trace off (b)", budget, run);
+        telemetry::trace::set_enabled(true);
+        let on = bench("rp_gemm_ex 16x2048x16, trace on", budget, run);
+        telemetry::trace::set_enabled(false);
+        telemetry::trace::clear();
+        let macs = (m * k * n) as f64;
+        let off_med = off_a.median.as_secs_f64().max(1e-12);
+        let disabled_delta_pct =
+            100.0 * (off_b.median.as_secs_f64() - off_med).abs() / off_med;
+        let enabled_overhead_pct = 100.0 * (on.median.as_secs_f64() - off_med) / off_med;
+        println!(
+            "  -> trace disabled: {:.1}M MACs/s (repeat delta {disabled_delta_pct:.2}%), \
+             enabled overhead {enabled_overhead_pct:.2}%",
+            macs / off_med / 1e6
+        );
+        let mut tj = Json::obj();
+        tj.set("off_median_ns", off_a.median.as_nanos() as u64);
+        tj.set("off_repeat_median_ns", off_b.median.as_nanos() as u64);
+        tj.set("on_median_ns", on.median.as_nanos() as u64);
+        tj.set("disabled_macs_per_sec", macs / off_med);
+        tj.set("disabled_delta_pct", disabled_delta_pct);
+        tj.set("enabled_overhead_pct", enabled_overhead_pct);
+        trace_overhead = Some(tj);
+        results.push(off_a);
+        results.push(off_b);
+        results.push(on);
+        phases.close("trace");
+    }
+
     // --- serve pipeline throughput ---------------------------------------------
     // A 200-line advisor batch over the three builtin networks, answered
     // through the pooled `serve_with` pipeline. The first (unmeasured)
@@ -473,6 +526,9 @@ fn main() {
         overhead.set("on_median_ns", tel_on.median.as_nanos() as u64);
         overhead.set("overhead_pct", overhead_pct);
         root.set("telemetry_overhead", overhead);
+    }
+    if let Some(t) = trace_overhead {
+        root.set("trace_overhead", t);
     }
     if let Some(st) = serve_throughput {
         root.set("serve_throughput", st);

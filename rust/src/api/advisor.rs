@@ -128,6 +128,12 @@ impl AdvisorRequest {
 
     /// Run the analysis through the process-wide solve cache.
     pub fn run(&self) -> Result<AdvisorReport> {
+        let _tspan = if crate::telemetry::trace::enabled() {
+            crate::telemetry::trace::TraceSpan::enter("advisor.run")
+                .attr("network", self.telemetry_label())
+        } else {
+            crate::telemetry::trace::TraceSpan::noop()
+        };
         let _span = if crate::telemetry::enabled() {
             let label = self.telemetry_label();
             crate::telemetry::counter(&crate::telemetry::labeled(

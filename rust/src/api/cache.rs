@@ -129,6 +129,11 @@ impl SolveCache {
 
     /// Memoized [`solver::min_m_acc`].
     pub fn min_m_acc(&self, spec: &AccumSpec) -> u32 {
+        let _span = if telemetry::trace::enabled() {
+            telemetry::trace::TraceSpan::enter("cache.min_m_acc").attr("n", spec.n.to_string())
+        } else {
+            telemetry::trace::TraceSpan::noop()
+        };
         let key = SpecKey::of(spec);
         if let Some(&m) = self.locked(&self.solve).get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);

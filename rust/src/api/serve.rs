@@ -61,7 +61,7 @@ use super::check::CheckRequest;
 use super::error::{ApiError, ErrorKind};
 use super::mctest::TestRequest;
 use super::train::TrainRequest;
-use crate::telemetry::{self, labeled, Counter, Gauge, Histogram, Timer};
+use crate::telemetry::{self, labeled, trace, Counter, Gauge, Histogram, Timer};
 use crate::util::json::Json;
 
 /// Counters for one [`serve`] session.
@@ -326,6 +326,20 @@ fn handle_line(line: &str, timeout_ms: Option<u64>) -> Reply {
         Err((err, id)) => return error_reply("invalid", err, id),
     };
     let ty = label_for(&env.ty);
+    // Root span of this request's trace tree: everything dispatch
+    // touches (trainer steps, GEMM panels, pool regions, MC trials,
+    // solver/cache calls) hangs below it. Spans opened inside a
+    // panicking handler unwind-record before `catch_unwind` returns, so
+    // a panicked request still ships a complete subtree.
+    let _rspan = if trace::enabled() {
+        let s = trace::TraceSpan::enter("serve.request").attr("type", ty);
+        match &env.id {
+            Some(id) => s.attr("id", id.to_string()),
+            None => s,
+        }
+    } else {
+        trace::TraceSpan::noop()
+    };
     let deadline = timeout_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
     match catch_unwind(AssertUnwindSafe(|| dispatch(&env, deadline))) {
         Ok(Ok(mut report)) => {
@@ -446,6 +460,11 @@ fn serve_sequential<R: BufRead, W: Write>(
             t.queue_depth.dec();
         }
         stats.tally(&reply);
+        if reply.timed_out || reply.panicked {
+            // Flight-recorder dump: the failed request's span tree (plus
+            // recent context) lands at the configured `--trace-out` path.
+            trace::dump_now();
+        }
         writeln!(out, "{}", reply.line).context("writing response line")?;
         out.flush().context("flushing response line")?;
     }
@@ -630,6 +649,10 @@ fn serve_concurrent<R: BufRead + Send, W: Write>(
                     t.queue_depth.dec();
                 }
                 stats.tally(&reply);
+                if reply.timed_out || reply.panicked {
+                    // Same failure dump as the sequential path.
+                    trace::dump_now();
+                }
                 if write_result.is_ok() {
                     write_result = writeln!(out, "{}", reply.line)
                         .context("writing response line")

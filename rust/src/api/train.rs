@@ -279,6 +279,13 @@ impl ResolvedTrain {
         test: &Dataset,
         deadline: Option<std::time::Instant>,
     ) -> Result<TrainReport, ApiError> {
+        let _tspan = if crate::telemetry::trace::enabled() {
+            crate::telemetry::trace::TraceSpan::enter("train.run")
+                .attr("steps", self.req.steps.to_string())
+                .attr("dim", self.req.dim.to_string())
+        } else {
+            crate::telemetry::trace::TraceSpan::noop()
+        };
         let _span = if crate::telemetry::enabled() {
             crate::telemetry::counter("abws_train_runs_total").inc();
             crate::telemetry::Span::enter(crate::telemetry::histogram("abws_train_run_wall_ns"))

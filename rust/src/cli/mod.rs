@@ -9,7 +9,9 @@
 //! abws train [--mode native|aot] [--macc 12 | --pp -1] [--chunk 64]
 //!            [--steps 300] [--dim 256] [--hidden 64] [--seed 42]
 //! abws serve [--workers N] [--queue-depth N] [--timeout-ms N] [--telemetry]
+//!            [--telemetry-interval-ms N] [--trace-out trace.json]
 //! abws metrics [--format table|json|prom] [--no-demo]
+//! abws trace [--out trace.json] [--seed S]
 //! abws list
 //! abws info
 //! ```
@@ -43,6 +45,7 @@ pub fn run(args: Args) -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("serve") => cmd_serve(&args),
         Some("metrics") => cmd_metrics(&args),
+        Some("trace") => cmd_trace(&args),
         Some("list") => {
             print!("{}", registry::render_catalog());
             Ok(())
@@ -56,7 +59,7 @@ pub fn run(args: Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: abws <predict|vrr|area|mc|train|serve|metrics|list|info> [options]
+const USAGE: &str = "usage: abws <predict|vrr|area|mc|train|serve|metrics|trace|list|info> [options]
   predict  — Table 1: per-layer-group accumulation precision predictions
   vrr      — evaluate VRR / v(n) for one accumulation setup
              (--empirical measures it with the Monte-Carlo engine instead:
@@ -68,9 +71,16 @@ const USAGE: &str = "usage: abws <predict|vrr|area|mc|train|serve|metrics|list|i
              (--workers N pools request execution, 0 = one per core; replies stay
               in input order. --queue-depth N bounds read-ahead (default 128).
               --timeout-ms N gives every request a deadline.
-              --telemetry prints a final JSON metrics snapshot to stderr)
+              --telemetry emits JSON metrics snapshots to stderr, periodically
+              (--telemetry-interval-ms, default 10000) and once at shutdown.
+              --trace-out PATH enables request tracing: the flight recorder is
+              dumped as chrome://tracing JSON on request timeout/panic and
+              drained to PATH on clean exit)
   metrics  — exercise the stack and print the telemetry snapshot
              (--format table|json|prom; --no-demo to skip the workload)
+  trace    — run the demo workload with tracing on and dump the span tree
+             as chrome://tracing JSON (--out FILE, default stdout; --seed S
+             fixes trace/span ids)
   list     — catalog of reproducible experiments
   info     — PJRT runtime info";
 
@@ -380,20 +390,69 @@ fn serve_options(args: &Args) -> Result<api::ServeOptions> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
     let opts = serve_options(args)?;
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    if let Some(path) = &trace_out {
+        crate::telemetry::trace::set_dump_path(Some(path.clone()));
+        crate::telemetry::trace::set_enabled(true);
+    }
+    // Periodic telemetry emitter: one JSON snapshot line to stderr per
+    // interval while serving. Snapshots go to stderr so they never
+    // interleave with the NDJSON report stream on stdout.
+    let telemetry_on = args.flag("telemetry");
+    let interval_ms = match parse_count(args, "telemetry-interval-ms")? {
+        Some(i) => {
+            ensure!(i >= 1, "--telemetry-interval-ms must be at least 1");
+            i
+        }
+        None => 10_000,
+    };
+    let stop = Arc::new(AtomicBool::new(false));
+    let emitter = telemetry_on.then(|| {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            // Sleep in short slices so shutdown never waits out a full
+            // interval behind a parked emitter.
+            let mut elapsed = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(std::time::Duration::from_millis(interval_ms.min(50)));
+                elapsed += interval_ms.min(50);
+                if elapsed >= interval_ms {
+                    elapsed = 0;
+                    eprintln!("{}", crate::telemetry::snapshot().to_json());
+                }
+            }
+        })
+    });
     let stdout = std::io::stdout();
     // `StdinLock` is not `Send` (the reader thread needs to own its
     // input), so wrap the unlocked handle in our own buffer.
     let input = std::io::BufReader::new(std::io::stdin());
-    let stats = api::serve_with(input, stdout.lock(), &opts)?;
+    let result = api::serve_with(input, stdout.lock(), &opts);
+    stop.store(true, Ordering::Relaxed);
+    if let Some(handle) = emitter {
+        let _ = handle.join();
+    }
+    let stats = result?;
     eprintln!(
         "served {} request(s), {} error(s) ({} timeout(s), {} panic(s))",
         stats.requests, stats.errors, stats.timeouts, stats.panics
     );
-    // One JSON line to stderr so it never interleaves with the NDJSON
-    // report stream on stdout.
-    if args.flag("telemetry") {
+    // Shutdown always flushes one last snapshot: a fast-exiting stdin
+    // (piped batch input) can beat the emitter's first interval.
+    if telemetry_on {
         eprintln!("{}", crate::telemetry::snapshot().to_json());
+    }
+    // Drain the flight recorder on clean exit too — mid-run dumps only
+    // happen on request timeout/panic.
+    if let Some(path) = &trace_out {
+        match crate::telemetry::trace::drain_to_file(path) {
+            Ok(n) => eprintln!("wrote {n} trace span(s) to {}", path.display()),
+            Err(e) => eprintln!("trace dump to {} failed: {e}", path.display()),
+        }
     }
     Ok(())
 }
@@ -410,6 +469,34 @@ fn cmd_metrics(args: &Args) -> Result<()> {
         "json" => println!("{}", snap.to_json()),
         "prom" => print!("{}", snap.prometheus()),
         other => bail!("unknown format '{other}' (table|json|prom)"),
+    }
+    Ok(())
+}
+
+/// `abws trace`: run the demo workload with tracing enabled, then dump
+/// the flight recorder as chrome://tracing JSON (open the file via
+/// `chrome://tracing` or <https://ui.perfetto.dev>).
+fn cmd_trace(args: &Args) -> Result<()> {
+    use crate::telemetry::trace;
+
+    if let Some(s) = args.get("seed") {
+        let seed: u64 = s
+            .parse()
+            .map_err(|_| anyhow!("--seed expects an unsigned integer, got '{s}'"))?;
+        trace::reseed(seed);
+    }
+    trace::set_enabled(true);
+    let ran = exercise_stack();
+    trace::set_enabled(false);
+    ran?;
+    let spans = trace::drain_spans();
+    let json = trace::chrome_trace_json(&spans);
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, json.to_string())?;
+            eprintln!("wrote {} trace span(s) to {path}", spans.len());
+        }
+        None => println!("{json}"),
     }
     Ok(())
 }
@@ -549,6 +636,26 @@ mod tests {
     fn unknown_command_lists_usage() {
         let e = run(args(&["frobnicate"])).unwrap_err();
         assert!(format!("{e:#}").contains("usage:"));
+    }
+
+    #[test]
+    fn trace_rejects_bad_seed() {
+        // Errors out before touching the global trace-enabled flag, so
+        // this cannot race the telemetry::trace module tests.
+        let e = cmd_trace(&args(&["trace", "--seed", "xyzzy"])).unwrap_err();
+        assert!(format!("{e:#}").contains("--seed"));
+    }
+
+    #[test]
+    fn serve_telemetry_interval_parses_or_errors() {
+        // Interval is parsed by cmd_serve, not serve_options; options
+        // themselves stay valid.
+        assert!(serve_options(&args(&["serve", "--telemetry-interval-ms", "soon"])).is_ok());
+        let flag = "telemetry-interval-ms";
+        let bad = args(&["serve", "--telemetry-interval-ms", "soon"]);
+        assert!(parse_count(&bad, flag).is_err());
+        let good = args(&["serve", "--telemetry-interval-ms", "250"]);
+        assert_eq!(parse_count(&good, flag).unwrap(), Some(250));
     }
 
     #[test]

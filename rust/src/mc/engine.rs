@@ -44,7 +44,7 @@ use crate::runtime::pool;
 use crate::softfloat::accumulate::{chunked_sum_q, exact_sum, sequential_sum_q};
 use crate::softfloat::format::FpFormat;
 use crate::softfloat::quant::{Quantizer, Rne, RoundMode, Rounding, Rtz};
-use crate::telemetry::{self, Timer};
+use crate::telemetry::{self, trace, Timer};
 use crate::util::rng::Pcg64;
 use crate::util::stats::Welford;
 
@@ -226,6 +226,16 @@ pub fn sweep_vrr(ens: &Ensemble, grid: &[AccumSetup]) -> Result<Vec<McResult>, M
     }
 
     let run_timer = telemetry::enabled().then(Timer::start);
+    // Parent span for the sweep; pool regions (and the per-trial spans
+    // inside them) attach below it.
+    let _sspan = if trace::enabled() {
+        trace::TraceSpan::enter("mc.sweep")
+            .attr("trials", ens.trials.to_string())
+            .attr("n", ens.n.to_string())
+            .attr("width", grid.len().to_string())
+    } else {
+        trace::TraceSpan::noop()
+    };
     // All per-config constants resolved once, outside the trial loop.
     let kernels: Vec<SumKernel> = grid
         .iter()
@@ -250,6 +260,11 @@ pub fn sweep_vrr(ens: &Ensemble, grid: &[AccumSetup]) -> Result<Vec<McResult>, M
             if trial >= trials {
                 break;
             }
+            let _tspan = if trace::enabled() {
+                trace::TraceSpan::enter("mc.trial").attr("trial", trial.to_string())
+            } else {
+                trace::TraceSpan::noop()
+            };
             // One PCG stream per trial: trial `i` draws the same terms
             // whichever participant runs it.
             let mut rng = Pcg64::new(ens.seed, trial as u64 + 1);

@@ -35,6 +35,8 @@ use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 use std::time::Instant;
 
+use crate::telemetry::trace;
+
 /// What a parallel region reports back: region wall time and per
 /// participant busy time (the caller first, pool workers after, in
 /// completion order).
@@ -60,6 +62,10 @@ type Job = &'static (dyn Fn() + Sync);
 struct State {
     /// The open region's job; `None` between regions.
     job: Option<Job>,
+    /// The spawning span of the open region, if tracing is enabled:
+    /// workers install it as their ambient parent so spans opened inside
+    /// the job attach to the caller's span tree.
+    ctx: Option<trace::SpanCtx>,
     /// Bumped once per region so sleeping workers can tell a new job
     /// from a spurious wakeup or an already-drained one.
     epoch: u64,
@@ -88,17 +94,33 @@ pub struct WorkerPool {
     region: Mutex<()>,
 }
 
+/// Install the region's spawning span as this worker's ambient parent —
+/// only when one was captured (tracing on *and* the caller had a span).
+fn set_ambient_if(ctx: Option<trace::SpanCtx>) -> Option<trace::AmbientGuard> {
+    ctx.map(|c| trace::set_ambient(Some(c)))
+}
+
+/// A `pool.region` span for one participant of a traced region. Inert
+/// when the region carries no spawning span.
+fn region_span(ctx: Option<trace::SpanCtx>) -> trace::TraceSpan {
+    if ctx.is_some() {
+        trace::TraceSpan::enter("pool.region")
+    } else {
+        trace::TraceSpan::noop()
+    }
+}
+
 fn worker_loop(shared: Arc<Shared>) {
     let mut seen = 0u64;
     loop {
-        let job = {
+        let (job, ctx) = {
             let mut st = shared.state.lock().unwrap();
             loop {
                 if st.epoch != seen {
                     seen = st.epoch;
                     if st.unclaimed > 0 {
                         st.unclaimed -= 1;
-                        break st.job.expect("open region with no job");
+                        break (st.job.expect("open region with no job"), st.ctx);
                     }
                     // Region already fully claimed — wait for the next.
                 }
@@ -106,7 +128,14 @@ fn worker_loop(shared: Arc<Shared>) {
             }
         };
         let t0 = Instant::now();
-        let result = catch_unwind(AssertUnwindSafe(|| job()));
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            // Adopt the spawning span as parent for anything the job
+            // traces on this thread; both guards unwind-safely restore
+            // state if the job panics.
+            let _ambient = set_ambient_if(ctx);
+            let _span = region_span(ctx);
+            job()
+        }));
         let busy = t0.elapsed().as_nanos() as u64;
         let mut st = shared.state.lock().unwrap();
         st.busy_ns.push(busy);
@@ -126,6 +155,7 @@ impl WorkerPool {
             shared: Arc::new(Shared {
                 state: Mutex::new(State {
                     job: None,
+                    ctx: None,
                     epoch: 0,
                     unclaimed: 0,
                     running: 0,
@@ -158,6 +188,13 @@ impl WorkerPool {
     /// open, the caller runs `f` alone (see the module docs for why that
     /// must be equivalent).
     pub fn run(&self, threads: usize, f: &(dyn Fn() + Sync)) -> RunReport {
+        // Captured once per region: the span the region's participants
+        // parent onto. `None` whenever tracing is off (one relaxed load).
+        let ctx = if trace::enabled() {
+            trace::current()
+        } else {
+            None
+        };
         let region = if threads > 1 {
             self.region.try_lock().ok()
         } else {
@@ -165,7 +202,10 @@ impl WorkerPool {
         };
         let Some(_region) = region else {
             let t0 = Instant::now();
-            f();
+            {
+                let _span = region_span(ctx);
+                f();
+            }
             let ns = t0.elapsed().as_nanos() as u64;
             return RunReport {
                 wall_ns: ns.max(1),
@@ -186,6 +226,7 @@ impl WorkerPool {
         {
             let mut st = self.shared.state.lock().unwrap();
             st.job = Some(job);
+            st.ctx = ctx;
             st.epoch = st.epoch.wrapping_add(1);
             st.unclaimed = helpers;
             st.running = helpers;
@@ -195,7 +236,10 @@ impl WorkerPool {
         self.shared.work_cv.notify_all();
 
         let t0 = Instant::now();
-        let caller = catch_unwind(AssertUnwindSafe(|| f()));
+        let caller = catch_unwind(AssertUnwindSafe(|| {
+            let _span = region_span(ctx);
+            f()
+        }));
         let caller_busy = t0.elapsed().as_nanos() as u64;
 
         let (worker_panicked, mut busy_ns) = {
@@ -204,6 +248,7 @@ impl WorkerPool {
                 st = self.shared.done_cv.wait(st).unwrap();
             }
             st.job = None;
+            st.ctx = None;
             (st.panicked, std::mem::take(&mut st.busy_ns))
         };
         let wall_ns = wall.elapsed().as_nanos() as u64;

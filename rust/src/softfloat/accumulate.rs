@@ -63,6 +63,11 @@ impl Accumulator {
 /// Sequential reduced-precision sum: `s_{i} = rnd(s_{i-1} + p_i)`.
 pub fn sequential_sum(terms: &[f64], acc_fmt: FpFormat, mode: Rounding) -> f64 {
     let q = Quantizer::new(acc_fmt, mode);
+    // 1-in-K numerics health sample — an observer only; the returned
+    // sum is computed by the same fast path as always.
+    if crate::telemetry::health::should_sample() {
+        crate::telemetry::health::observe("accumulate", terms, acc_fmt, mode, None, None);
+    }
     match mode {
         Rounding::NearestEven => sequential_sum_q::<Rne>(terms, &q),
         Rounding::TowardZero => sequential_sum_q::<Rtz>(terms, &q),
@@ -91,6 +96,10 @@ pub fn sequential_sum_q<R: RoundMode>(terms: &[f64], q: &Quantizer) -> f64 {
 /// A trailing partial chunk is handled naturally (shorter intra sum).
 pub fn chunked_sum(terms: &[f64], chunk: usize, acc_fmt: FpFormat, mode: Rounding) -> f64 {
     let q = Quantizer::new(acc_fmt, mode);
+    // Same 1-in-K health observer as `sequential_sum`.
+    if chunk > 0 && crate::telemetry::health::should_sample() {
+        crate::telemetry::health::observe("accumulate", terms, acc_fmt, mode, None, Some(chunk));
+    }
     match mode {
         Rounding::NearestEven => chunked_sum_q::<Rne>(terms, chunk, &q),
         Rounding::TowardZero => chunked_sum_q::<Rtz>(terms, chunk, &q),

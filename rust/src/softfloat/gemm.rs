@@ -39,6 +39,7 @@ use super::tensor::Tensor;
 use crate::coordinator::sweep::default_threads;
 use crate::runtime::pool;
 use crate::telemetry;
+use crate::telemetry::{health, trace};
 
 /// Configuration of a reduced-precision GEMM.
 #[derive(Clone, Copy, Debug)]
@@ -115,6 +116,10 @@ pub struct GemmCtx {
     /// Checked between row panels; once passed, the GEMM stops claiming
     /// panels and returns [`Interrupted`].
     pub deadline: Option<Instant>,
+    /// Label for this GEMM in trace spans and health-monitor series
+    /// (the trainer passes `"fwd"`/`"bwd"`/`"grad"`); `""` falls back
+    /// to `"gemm"`.
+    pub op: &'static str,
 }
 
 /// A GEMM stopped cooperatively because its [`GemmCtx::deadline`]
@@ -372,6 +377,23 @@ fn run_panels(
     // deadline polls, few enough that claim traffic stays negligible.
     let panel = m.div_ceil(threads * 4).max(1);
 
+    let op = if ctx.op.is_empty() { "gemm" } else { ctx.op };
+    // Parent span for this GEMM; the pool captures it as the region
+    // context, so every participant's `pool.region` (and the `gemm.panel`
+    // spans inside) attaches below it.
+    let _gspan = if trace::enabled() {
+        trace::TraceSpan::enter("gemm")
+            .attr("op", op)
+            .attr("shape", format!("{m}x{k}x{n}"))
+            .attr("m_acc", cfg.acc.man_bits.to_string())
+            .attr(
+                "chunk",
+                cfg.chunk.map_or_else(|| "none".into(), |c| c.to_string()),
+            )
+    } else {
+        trace::TraceSpan::noop()
+    };
+
     let kern = Kern {
         a,
         b,
@@ -404,6 +426,11 @@ fn run_panels(
                 break;
             }
             let end = (start + panel).min(m);
+            let _pspan = if trace::enabled() {
+                trace::TraceSpan::enter("gemm.panel").attr("rows", format!("{start}..{end}"))
+            } else {
+                trace::TraceSpan::noop()
+            };
             // Disjoint rows `start..end` of the output — exclusively
             // ours for this panel (see `SendPtr`).
             let out_rows = unsafe {
@@ -426,6 +453,20 @@ fn run_panels(
     }
     if cancelled.load(Ordering::Relaxed) {
         return Err(Interrupted);
+    }
+
+    // Numerics health, 1-in-K GEMM calls: re-derive the product terms of
+    // one dot and replay them instrumented (swamping count, exact sum).
+    // The kernel's output is never touched — purely an observer.
+    if health::should_sample() {
+        let t = health::sample_tick() as usize;
+        let (i, j) = (t % m, t % n);
+        let terms: Vec<f64> = a[i * k..(i + 1) * k]
+            .iter()
+            .zip(&b[j * k..(j + 1) * k])
+            .map(|(&x, &y)| kern.prod.quantize(x as f64 * y as f64))
+            .collect();
+        health::observe(op, &terms, cfg.acc, cfg.mode, Some(cfg.prod.man_bits), cfg.chunk);
     }
     Ok(out)
 }
@@ -672,7 +713,7 @@ mod tests {
             for threads in [1usize, 2, 4] {
                 let ctx = GemmCtx {
                     threads,
-                    deadline: None,
+                    ..GemmCtx::default()
                 };
                 let got = rp_gemm_ex(&a, &b, &cfg, Layout::NN, &ctx).unwrap();
                 assert_eq!(bits(&got), want, "threads={threads} cfg={cfg:?}");
@@ -727,6 +768,7 @@ mod tests {
         let ctx = GemmCtx {
             threads: 2,
             deadline: Some(Instant::now() - Duration::from_millis(1)),
+            ..GemmCtx::default()
         };
         let r = rp_gemm_ex(&a, &b, &GemmConfig::paper(8, None), Layout::NN, &ctx);
         assert_eq!(r.err(), Some(Interrupted));

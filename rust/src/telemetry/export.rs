@@ -5,6 +5,13 @@
 //! emits one `# TYPE` line per base, and for histograms expands the
 //! log2 buckets into cumulative `_bucket{le="..."}` series plus `_sum`
 //! and `_count`.
+//!
+//! Label suffixes are not trusted: keys inserted directly by collectors
+//! (bypassing [`super::registry::labeled`]) may carry raw `"`, `\` or
+//! newlines that would corrupt the line-oriented exposition format. The
+//! exporter re-parses every suffix and re-serializes it with the
+//! exposition escapes (`\\`, `\"`, `\n`); suffixes that are not label
+//! syntax at all are dropped so the base series still exports.
 
 use std::collections::BTreeSet;
 use std::fmt::Write as _;
@@ -26,11 +33,116 @@ fn sanitize_base(name: &str) -> String {
         .collect()
 }
 
-/// Split a registry key into (sanitized base, label suffix incl. braces).
-fn split_series(key: &str) -> (String, &str) {
+/// Label name sanitized to the exposition charset `[a-zA-Z0-9_]` with a
+/// non-digit first character.
+fn sanitize_label_name(name: &str) -> String {
+    let mut out: String = name
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '_' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect();
+    if out.is_empty() || out.as_bytes()[0].is_ascii_digit() {
+        out.insert(0, '_');
+    }
+    out
+}
+
+/// Escape a label value per the exposition rules: backslash, double
+/// quote and newline must be `\\`, `\"` and `\n`.
+fn escape_label_value(value: &str) -> String {
+    let mut out = String::with_capacity(value.len());
+    for ch in value.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Leniently parse a `{k="v",...}` suffix into label pairs, resolving
+/// `\\` / `\"` / `\n` escapes (so keys built by [`labeled`] round-trip)
+/// while also tolerating raw newlines inside values. Returns `None` when
+/// the suffix is not label syntax.
+///
+/// [`labeled`]: super::registry::labeled
+fn parse_labels(suffix: &str) -> Option<Vec<(String, String)>> {
+    let inner = suffix.strip_prefix('{')?.strip_suffix('}')?;
+    let mut pairs = Vec::new();
+    let mut rest = inner;
+    while !rest.is_empty() {
+        let eq = rest.find("=\"")?;
+        let name = &rest[..eq];
+        let mut value = String::new();
+        let mut end = None;
+        let mut chars = rest[eq + 2..].char_indices();
+        while let Some((i, c)) = chars.next() {
+            match c {
+                '\\' => match chars.next() {
+                    Some((_, 'n')) => value.push('\n'),
+                    Some((_, esc @ ('\\' | '"'))) => value.push(esc),
+                    // Not an exposition escape: keep the raw backslash.
+                    Some((_, other)) => {
+                        value.push('\\');
+                        value.push(other);
+                    }
+                    None => return None,
+                },
+                '"' => {
+                    end = Some(i);
+                    break;
+                }
+                c => value.push(c),
+            }
+        }
+        pairs.push((name.to_string(), value));
+        rest = &rest[eq + 2 + end? + 1..];
+        match rest.strip_prefix(',') {
+            Some(r) => rest = r,
+            None if rest.is_empty() => {}
+            None => return None,
+        }
+    }
+    Some(pairs)
+}
+
+/// Re-serialize parsed label pairs with sanitized names and escaped
+/// values — always valid exposition output.
+fn render_labels(pairs: &[(String, String)]) -> String {
+    let mut s = String::from("{");
+    for (i, (k, v)) in pairs.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&sanitize_label_name(k));
+        s.push_str("=\"");
+        s.push_str(&escape_label_value(v));
+        s.push('"');
+    }
+    s.push('}');
+    s
+}
+
+/// Split a registry key into (sanitized base, re-escaped label suffix).
+/// An unparseable suffix is dropped rather than emitted verbatim, so one
+/// hand-built key can never corrupt the whole exposition page.
+fn split_series(key: &str) -> (String, String) {
     match key.find('{') {
-        Some(i) => (sanitize_base(&key[..i]), &key[i..]),
-        None => (sanitize_base(key), ""),
+        Some(i) => {
+            let base = sanitize_base(&key[..i]);
+            match parse_labels(&key[i..]) {
+                Some(pairs) if !pairs.is_empty() => (base, render_labels(&pairs)),
+                _ => (base, String::new()),
+            }
+        }
+        None => (sanitize_base(key), String::new()),
     }
 }
 
@@ -81,9 +193,9 @@ impl TelemetrySnapshot {
             for (i, &c) in h.buckets.iter().enumerate().take(highest) {
                 cum += c;
                 let le = bucket_upper(i).to_string();
-                let _ = writeln!(out, "{base}_bucket{} {cum}", with_le(labels, &le));
+                let _ = writeln!(out, "{base}_bucket{} {cum}", with_le(&labels, &le));
             }
-            let _ = writeln!(out, "{base}_bucket{} {}", with_le(labels, "+Inf"), h.count);
+            let _ = writeln!(out, "{base}_bucket{} {}", with_le(&labels, "+Inf"), h.count);
             let _ = writeln!(out, "{base}_sum{labels} {}", h.sum);
             let _ = writeln!(out, "{base}_count{labels} {}", h.count);
         }
@@ -176,5 +288,53 @@ mod tests {
         let mut s = TelemetrySnapshot::default();
         s.counters.insert("bad.name-1".into(), 1);
         assert!(s.prometheus().contains("bad_name_1 1"));
+    }
+
+    #[test]
+    fn labeled_keys_round_trip_without_double_escaping() {
+        // `labeled` already escaped these; the exporter must not escape
+        // the escapes again.
+        let mut s = TelemetrySnapshot::default();
+        let key = labeled("reqs_total", &[("msg", "a\nb\"c\\d")]);
+        s.counters.insert(key, 7);
+        let text = s.prometheus();
+        assert!(
+            text.contains("reqs_total{msg=\"a\\nb\\\"c\\\\d\"} 7"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn raw_special_characters_in_labels_are_escaped_at_export() {
+        // A collector inserting a key by hand (bypassing `labeled`) with
+        // a raw newline and backslash must still yield valid exposition:
+        // one line per sample, specials escaped.
+        let mut s = TelemetrySnapshot::default();
+        s.counters.insert("raw_total{msg=\"two\nlines \\ here\"}".into(), 3);
+        s.gauges.insert("g{1bad-name=\"x\"}".into(), 5);
+        let text = s.prometheus();
+        assert!(
+            text.contains("raw_total{msg=\"two\\nlines \\\\ here\"} 3"),
+            "{text}"
+        );
+        // Label names are sanitized into the exposition charset.
+        assert!(text.contains("g{_1bad_name=\"x\"} 5"), "{text}");
+        for line in text.lines() {
+            let (_, value) = line.rsplit_once(' ').expect("name value");
+            assert!(
+                value.parse::<f64>().is_ok() || line.starts_with("# TYPE"),
+                "split sample line: {line:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn unparseable_label_suffix_falls_back_to_base_series() {
+        let mut s = TelemetrySnapshot::default();
+        s.counters.insert("weird{not labels at all".into(), 3);
+        s.counters.insert("empty{}".into(), 4);
+        let text = s.prometheus();
+        assert!(text.contains("weird 3"), "{text}");
+        assert!(text.contains("empty 4"), "{text}");
     }
 }

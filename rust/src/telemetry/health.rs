@@ -1,0 +1,316 @@
+//! Sampled numerics health: live swamping counts and measured-vs-theory
+//! VRR, per op.
+//!
+//! The paper's claim is statistical — a too-narrow accumulator loses
+//! partial-sum variance through *swamping* (an addend whose magnitude
+//! gap to the running sum exceeds the mantissa width is absorbed
+//! entirely). The solver predicts that loss a priori; this monitor
+//! measures it in vivo. For 1-in-K sampled accumulations (one dot
+//! product per sampled GEMM call, one call per sampled `accumulate`
+//! wrapper call), [`observe`] replays the product terms through an
+//! instrumented copy of the reduced-precision loop, counting swamping
+//! events and collecting the reduced and exact sums into per-op
+//! [`Welford`] accumulators. The ratio of their variances is the
+//! *measured* VRR, exported as a ppm gauge right next to the
+//! *theoretical* VRR from [`vrr::solver`](crate::vrr::solver) for the
+//! same `(n, m_p, m_acc, chunk)` — theory-vs-practice drift shows up as
+//! two diverging gauges in `abws metrics` and the Prometheus export.
+//!
+//! The sampled replay never touches the real computation: GEMM outputs
+//! and accumulate results stay bit-identical whether the monitor is on
+//! or off. Cost when off (or between samples) is one relaxed
+//! `fetch_add` per *call*, not per MAC.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::softfloat::accumulate::exact_sum;
+use crate::softfloat::format::FpFormat;
+use crate::softfloat::quant::{Quantizer, Rounding};
+use crate::util::stats::Welford;
+use crate::vrr::solver::AccumSpec;
+
+/// Default sampling period: one observed accumulation per K calls.
+pub const DEFAULT_SAMPLE_EVERY: u64 = 64;
+
+static HEALTH_ENABLED: AtomicBool = AtomicBool::new(true);
+static SAMPLE_EVERY: AtomicU64 = AtomicU64::new(DEFAULT_SAMPLE_EVERY);
+static TICKS: AtomicU64 = AtomicU64::new(0);
+
+/// Is the health monitor enabled? It additionally requires the global
+/// [`telemetry::enabled`](super::enabled) switch, so benches that turn
+/// telemetry off silence this too.
+#[inline]
+pub fn enabled() -> bool {
+    HEALTH_ENABLED.load(Ordering::Relaxed) && super::enabled()
+}
+
+/// Turn the health monitor on or off (default on; it only fires 1-in-K).
+pub fn set_enabled(on: bool) {
+    HEALTH_ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Set the sampling period K (clamped to ≥ 1).
+pub fn set_sample_every(k: u64) {
+    SAMPLE_EVERY.store(k.max(1), Ordering::Relaxed);
+}
+
+/// Should this call be sampled? One relaxed `fetch_add` when enabled;
+/// true on every K-th call.
+#[inline]
+pub fn should_sample() -> bool {
+    if !enabled() {
+        return false;
+    }
+    let k = SAMPLE_EVERY.load(Ordering::Relaxed).max(1);
+    TICKS.fetch_add(1, Ordering::Relaxed) % k == 0
+}
+
+/// The global sample tick, for callers that want to vary *which* dot
+/// they sample (e.g. the GEMM picks `(tick % m, tick % n)`).
+pub fn sample_tick() -> u64 {
+    TICKS.load(Ordering::Relaxed)
+}
+
+/// Accumulated health state for one op label.
+#[derive(Clone, Debug, Default)]
+pub struct HealthStats {
+    /// Reduced-precision sums of the sampled accumulations.
+    pub reduced: Welford,
+    /// Exact (Neumaier) sums of the same term vectors.
+    pub exact: Welford,
+    /// Steps where the addend was fully absorbed (exponent gap >
+    /// `m_acc`), summed over all sampled accumulations.
+    pub swamping_events: u64,
+    /// Sampled accumulations observed.
+    pub samples: u64,
+    /// Last-seen shape, for the theory-side VRR gauge.
+    pub m_acc: u32,
+    pub m_p: Option<u32>,
+    pub n: usize,
+    pub chunk: Option<usize>,
+}
+
+impl HealthStats {
+    /// Measured VRR: Var(reduced) / Var(exact) over the sampled sums.
+    /// `None` until there are ≥ 2 samples with nonzero exact variance.
+    pub fn measured_vrr(&self) -> Option<f64> {
+        if self.samples < 2 {
+            return None;
+        }
+        let ve = self.exact.sample_variance();
+        if !(ve.is_finite() && ve > 0.0) {
+            return None;
+        }
+        Some(self.reduced.sample_variance() / ve)
+    }
+
+    /// Theoretical VRR from the solver for the last-seen shape. `None`
+    /// when the product mantissa width is unknown (plain `accumulate`
+    /// calls outside a GEMM don't know their terms' provenance).
+    pub fn theory_vrr(&self) -> Option<f64> {
+        let m_p = self.m_p?;
+        if self.n == 0 {
+            return None;
+        }
+        let spec = AccumSpec {
+            n: self.n,
+            m_p,
+            nzr: 1.0,
+            chunk: self.chunk,
+        };
+        Some(spec.vrr(self.m_acc))
+    }
+}
+
+struct MonitorState {
+    per_op: Mutex<BTreeMap<String, HealthStats>>,
+}
+
+fn state() -> &'static MonitorState {
+    static STATE: OnceLock<MonitorState> = OnceLock::new();
+    STATE.get_or_init(|| {
+        // Gauges/counters are derived at snapshot time from the state
+        // map — the hot path never touches the metrics registry.
+        super::register_collector(std::sync::Arc::new(|snap| {
+            for (op, st) in state().per_op.lock().unwrap().iter() {
+                let labels = &[("op", op.as_str())];
+                snap.counters.insert(
+                    super::labeled("abws_health_sampled_accums_total", labels),
+                    st.samples,
+                );
+                snap.counters.insert(
+                    super::labeled("abws_health_swamping_events_total", labels),
+                    st.swamping_events,
+                );
+                if let Some(v) = st.measured_vrr() {
+                    snap.gauges.insert(
+                        super::labeled("abws_health_measured_vrr_ppm", labels),
+                        (v * 1e6).round() as i64,
+                    );
+                }
+                if let Some(v) = st.theory_vrr() {
+                    snap.gauges.insert(
+                        super::labeled("abws_health_theory_vrr_ppm", labels),
+                        (v * 1e6).round() as i64,
+                    );
+                }
+            }
+        }));
+        MonitorState {
+            per_op: Mutex::new(BTreeMap::new()),
+        }
+    })
+}
+
+/// Biased exponent of `x` as a signed power of two (subnormals and zero
+/// collapse to the minimum — they can only be swamped, never swamp).
+#[inline]
+fn exp2_of(x: f64) -> i32 {
+    ((x.abs().to_bits() >> 52) & 0x7ff) as i32 - 1023
+}
+
+/// Replay `terms` through an instrumented copy of the reduced-precision
+/// accumulation, counting swamping events: steps where both operands are
+/// nonzero and `exp(sum) - exp(term) > m_acc`, the regime where the
+/// addend's entire mantissa falls off the accumulator's right edge.
+fn replay(terms: &[f64], q: &Quantizer, m_acc: u32, chunk: Option<usize>) -> (f64, u64) {
+    let mut swamps = 0u64;
+    let mut run = |block: &[f64], mut s: f64| -> f64 {
+        for &t in block {
+            if t != 0.0 && s != 0.0 && exp2_of(s) - exp2_of(t) > m_acc as i32 {
+                swamps += 1;
+            }
+            s = q.quantize(s + t);
+        }
+        s
+    };
+    let reduced = match chunk {
+        None | Some(0) => run(terms, 0.0),
+        Some(c) => {
+            let partials: Vec<f64> = terms.chunks(c).map(|b| run(b, 0.0)).collect();
+            run(&partials, 0.0)
+        }
+    };
+    (reduced, swamps)
+}
+
+/// Observe one sampled accumulation: `terms` are the (already
+/// product-quantized) addends, `acc`/`mode` the accumulator format, and
+/// `m_p` the product mantissa width when known (enables the theory-VRR
+/// gauge). Call only after [`should_sample`] returned true.
+pub fn observe(
+    op: &str,
+    terms: &[f64],
+    acc: FpFormat,
+    mode: Rounding,
+    m_p: Option<u32>,
+    chunk: Option<usize>,
+) {
+    if terms.is_empty() {
+        return;
+    }
+    let q = Quantizer::new(acc, mode);
+    let (reduced, swamps) = replay(terms, &q, acc.man_bits, chunk);
+    let exact = exact_sum(terms);
+    let mut map = state().per_op.lock().unwrap();
+    let st = map.entry(op.to_string()).or_default();
+    st.reduced.push(reduced);
+    st.exact.push(exact);
+    st.swamping_events += swamps;
+    st.samples += 1;
+    st.m_acc = acc.man_bits;
+    st.m_p = m_p.or(st.m_p);
+    st.n = terms.len();
+    st.chunk = chunk;
+}
+
+/// Current per-op health stats (cloned), keyed by op label.
+pub fn stats() -> BTreeMap<String, HealthStats> {
+    state().per_op.lock().unwrap().clone()
+}
+
+/// Drop all per-op state (test isolation).
+pub fn reset() {
+    state().per_op.lock().unwrap().clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softfloat::accumulate::sequential_sum;
+
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn replay_matches_production_accumulation() {
+        // The instrumented replay must agree bit-for-bit with the real
+        // reduced-precision sum — otherwise the measured VRR is fiction.
+        let acc = FpFormat::accumulator(10);
+        let mut rng = crate::util::rng::Pcg64::seeded(5);
+        let terms: Vec<f64> = (0..512).map(|_| rng.normal()).collect();
+        let q = Quantizer::new(acc, Rounding::NearestEven);
+        let (reduced, _) = replay(&terms, &q, acc.man_bits, None);
+        assert_eq!(
+            reduced.to_bits(),
+            sequential_sum(&terms, acc, Rounding::NearestEven).to_bits()
+        );
+    }
+
+    #[test]
+    fn narrow_accumulator_swamps_wide_does_not() {
+        let _g = LOCK.lock().unwrap();
+        let mut rng = crate::util::rng::Pcg64::seeded(6);
+        let terms: Vec<f64> = (0..4096).map(|_| rng.normal()).collect();
+        let q_narrow = Quantizer::new(FpFormat::accumulator(4), Rounding::NearestEven);
+        let (_, swamps_narrow) = replay(&terms, &q_narrow, 4, None);
+        let q_wide = Quantizer::new(FpFormat::accumulator(52), Rounding::NearestEven);
+        let (_, swamps_wide) = replay(&terms, &q_wide, 52, None);
+        assert!(
+            swamps_narrow > 0,
+            "m_acc=4 over n=4096 must swamp (got {swamps_narrow})"
+        );
+        assert_eq!(swamps_wide, 0, "f64-width accumulator must not swamp");
+    }
+
+    #[test]
+    fn observe_exports_gauges_through_collector() {
+        let _g = LOCK.lock().unwrap();
+        let _t = super::super::TEST_ENABLED_LOCK.lock().unwrap();
+        reset();
+        let mut rng = crate::util::rng::Pcg64::seeded(7);
+        let acc = FpFormat::accumulator(8);
+        for _ in 0..8 {
+            let terms: Vec<f64> = (0..256).map(|_| rng.normal()).collect();
+            observe("unit_test_op", &terms, acc, Rounding::NearestEven, Some(5), None);
+        }
+        let st = stats();
+        let s = &st["unit_test_op"];
+        assert_eq!(s.samples, 8);
+        assert!(s.measured_vrr().is_some());
+        let theory = s.theory_vrr().unwrap();
+        assert!(theory > 0.0 && theory <= 1.0 + 1e-9);
+        let snap = super::super::snapshot();
+        let key = super::super::labeled(
+            "abws_health_sampled_accums_total",
+            &[("op", "unit_test_op")],
+        );
+        assert_eq!(snap.counters[&key], 8);
+        let vkey =
+            super::super::labeled("abws_health_measured_vrr_ppm", &[("op", "unit_test_op")]);
+        assert!(snap.gauges.contains_key(&vkey));
+        reset();
+    }
+
+    #[test]
+    fn sampling_period_is_respected() {
+        let _g = LOCK.lock().unwrap();
+        let _t = super::super::TEST_ENABLED_LOCK.lock().unwrap();
+        super::super::set_enabled(true);
+        set_sample_every(4);
+        let hits = (0..16).filter(|_| should_sample()).count();
+        set_sample_every(DEFAULT_SAMPLE_EVERY);
+        assert_eq!(hits, 4);
+    }
+}

@@ -34,13 +34,25 @@
 //! assert_eq!(delta.counters["demo_requests_total"], 1);
 //! ```
 //!
+//! Two sibling layers build on the registry:
+//!
+//! - [`trace`] — request-scoped span trees with deterministic PCG ids, a
+//!   lock-sharded flight recorder, and chrome://tracing export (`abws
+//!   trace`, `abws serve --trace-out`, automatic dumps on request
+//!   timeout/panic). Off by default; see `docs/tracing.md`.
+//! - [`health`] — a 1-in-K sampled numerics monitor inside the GEMM and
+//!   `accumulate` wrappers that counts swamping events and exposes
+//!   measured-vs-theoretical VRR gauges per op.
+//!
 //! The full metrics catalog is documented in `docs/telemetry.md`.
 
 pub mod export;
+pub mod health;
 pub mod metric;
 pub mod registry;
 pub mod snapshot;
 pub mod span;
+pub mod trace;
 
 pub use metric::{Counter, Gauge, Histogram, HistogramSnapshot};
 pub use registry::{labeled, Collector, Registry};

@@ -121,27 +121,57 @@ impl TelemetrySnapshot {
         }
         if !self.histograms.is_empty() {
             out.push_str("histograms:\n");
-            let width = self.histograms.keys().map(|k| k.len()).max().unwrap_or(0);
-            for (name, h) in &self.histograms {
-                // `_ns`-suffixed histograms hold nanoseconds — humanize.
-                let time_like = name.contains("_ns");
-                let fmt = |x: f64| {
-                    if time_like {
-                        fmt_ns(x)
-                    } else if x.is_nan() {
-                        "-".to_string()
-                    } else {
-                        format!("{x:.1}")
-                    }
-                };
-                out.push_str(&format!(
-                    "  {name:<width$}  count={} mean={} p50={} p95={} p99={}\n",
-                    h.count,
-                    fmt(h.mean()),
-                    fmt(h.quantile(0.50)),
-                    fmt(h.quantile(0.95)),
-                    fmt(h.quantile(0.99)),
-                ));
+            // Aligned columns: quantiles come from the log2 buckets, so
+            // p50/p95/p99 are bucket-upper-bound estimates.
+            let rows: Vec<(&String, [String; 5])> = self
+                .histograms
+                .iter()
+                .map(|(name, h)| {
+                    // `_ns`-suffixed histograms hold nanoseconds — humanize.
+                    let time_like = name.contains("_ns");
+                    let fmt = |x: f64| {
+                        if time_like {
+                            fmt_ns(x)
+                        } else if x.is_nan() {
+                            "-".to_string()
+                        } else {
+                            format!("{x:.1}")
+                        }
+                    };
+                    let cells = [
+                        h.count.to_string(),
+                        fmt(h.mean()),
+                        fmt(h.quantile(0.50)),
+                        fmt(h.quantile(0.95)),
+                        fmt(h.quantile(0.99)),
+                    ];
+                    (name, cells)
+                })
+                .collect();
+            let headers = ["count", "mean", "p50", "p95", "p99"];
+            let name_w = rows
+                .iter()
+                .map(|(n, _)| n.len())
+                .max()
+                .unwrap_or(0)
+                .max("name".len());
+            let mut col_w = headers.map(str::len);
+            for (_, cells) in &rows {
+                for (w, c) in col_w.iter_mut().zip(cells) {
+                    *w = (*w).max(c.len());
+                }
+            }
+            out.push_str(&format!("  {:<name_w$}", "name"));
+            for (h, w) in headers.iter().zip(col_w) {
+                out.push_str(&format!("  {h:>w$}"));
+            }
+            out.push('\n');
+            for (name, cells) in &rows {
+                out.push_str(&format!("  {name:<name_w$}"));
+                for (c, w) in cells.iter().zip(col_w) {
+                    out.push_str(&format!("  {c:>w$}"));
+                }
+                out.push('\n');
             }
         }
         if out.is_empty() {
@@ -205,6 +235,25 @@ mod tests {
         assert_eq!(d.counters["new_total"], 7);
         assert_eq!(d.histograms["lat_ns"].count, 2);
         assert_eq!(d.gauges["depth"], -2);
+    }
+
+    #[test]
+    fn render_histogram_table_has_percentile_columns() {
+        let text = sample().render();
+        let lines: Vec<&str> = text.lines().collect();
+        let hi = lines
+            .iter()
+            .position(|l| l.starts_with("histograms:"))
+            .unwrap();
+        let header = lines[hi + 1];
+        for col in ["name", "count", "mean", "p50", "p95", "p99"] {
+            assert!(header.contains(col), "missing {col} in {header:?}");
+        }
+        // One row per histogram: name then the five stat cells.
+        let toks: Vec<&str> = lines[hi + 2].split_whitespace().collect();
+        assert_eq!(toks.len(), 6, "{:?}", lines[hi + 2]);
+        assert_eq!(toks[0], "lat_ns");
+        assert_eq!(toks[1], "3");
     }
 
     #[test]

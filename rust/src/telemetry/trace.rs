@@ -1,0 +1,600 @@
+//! Request-scoped tracing: span trees, a flight recorder, chrome://tracing
+//! export.
+//!
+//! The metrics side of `telemetry` answers "how much / how long, in
+//! aggregate". This module answers *which*: which serve request spent its
+//! deadline inside which GEMM panel, on which worker. The model is the
+//! usual distributed-tracing one, collapsed to a single process:
+//!
+//! - A **span** is a named, timed region with a `trace_id` (shared by
+//!   every span of one request tree), its own `span_id`, and a
+//!   `parent_id` (0 for roots). Ids come from a PCG stream keyed by a
+//!   process-wide `(seed, counter)`, so [`reseed`] makes id assignment
+//!   deterministic for golden tests.
+//! - The **current span** is thread-local: [`TraceSpan::enter`] pushes
+//!   onto a stack, `Drop` pops and records. Crossing a thread boundary
+//!   (the worker pool) uses an **ambient** context: the spawner's
+//!   current span is captured once and installed on each worker via
+//!   [`set_ambient`], so pool regions adopt the spawning span as parent.
+//! - Completed spans land in the **flight recorder** — a lock-sharded
+//!   bounded ring that keeps the last N spans and drops the oldest. It
+//!   can be snapshotted (for crash/timeout dumps, ring kept) or drained
+//!   (clean shutdown) and serialized as chrome://tracing JSON via
+//!   [`chrome_trace_json`] — load the file at `chrome://tracing` or
+//!   <https://ui.perfetto.dev>.
+//!
+//! Tracing is **off by default** (unlike metrics): [`enabled`] is one
+//! relaxed load, and a disabled [`TraceSpan::enter`] allocates nothing
+//! and touches no thread-local state. Callsites that build attribute
+//! strings branch on [`enabled`] first, same as the metrics convention.
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+/// Spans kept by the flight recorder before the oldest are dropped.
+pub const RING_CAPACITY: usize = 4096;
+
+const SHARDS: usize = 8;
+
+// ---------------------------------------------------------------------------
+// Enable switch + id generation
+// ---------------------------------------------------------------------------
+
+static TRACE_ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is tracing enabled? One relaxed load; hot paths branch on this before
+/// building any attribute strings.
+#[inline]
+pub fn enabled() -> bool {
+    TRACE_ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span recording on or off process-wide. Off is the default: spans
+/// are a per-request diagnostic, not an always-on aggregate.
+pub fn set_enabled(on: bool) {
+    TRACE_ENABLED.store(on, Ordering::Relaxed);
+}
+
+static ID_SEED: AtomicU64 = AtomicU64::new(0x0ab5_1de5);
+static ID_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Reset the id generator: the `k`-th id handed out after `reseed(s)` is
+/// a pure function of `(s, k)`, so a single-threaded workload replayed
+/// after the same `reseed` gets identical trace/span ids.
+pub fn reseed(seed: u64) {
+    ID_SEED.store(seed, Ordering::Relaxed);
+    ID_COUNTER.store(0, Ordering::Relaxed);
+}
+
+fn next_id() -> u64 {
+    let k = ID_COUNTER.fetch_add(1, Ordering::Relaxed);
+    let seed = ID_SEED.load(Ordering::Relaxed);
+    // One dedicated PCG stream per counter value: ids never collide with
+    // the simulation RNG streams and stay reproducible under `reseed`.
+    let mut rng = Pcg64::new(seed, k);
+    loop {
+        let id = rng.next_u64();
+        if id != 0 {
+            return id; // 0 is reserved for "no parent"
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread-local context
+// ---------------------------------------------------------------------------
+
+/// The identity a child span attaches to: which trace, which parent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanCtx {
+    pub trace_id: u64,
+    pub span_id: u64,
+}
+
+thread_local! {
+    /// Open spans on this thread, innermost last.
+    static STACK: RefCell<Vec<SpanCtx>> = const { RefCell::new(Vec::new()) };
+    /// Cross-thread parent: what a root span on this thread adopts when
+    /// the local stack is empty (set by pool workers around a job).
+    static AMBIENT: Cell<Option<SpanCtx>> = const { Cell::new(None) };
+    /// Small stable per-thread id for the chrome `tid` field.
+    static TID: Cell<u64> = const { Cell::new(0) };
+}
+
+static TID_COUNTER: AtomicU64 = AtomicU64::new(1);
+
+fn tid() -> u64 {
+    TID.with(|t| {
+        let v = t.get();
+        if v != 0 {
+            v
+        } else {
+            let v = TID_COUNTER.fetch_add(1, Ordering::Relaxed);
+            t.set(v);
+            v
+        }
+    })
+}
+
+/// The context a child span created *right now* on this thread would
+/// use as its parent: the innermost open span, else the ambient context
+/// installed by the worker pool, else `None` (a fresh trace root).
+pub fn current() -> Option<SpanCtx> {
+    STACK
+        .with(|s| s.borrow().last().copied())
+        .or_else(|| AMBIENT.with(|a| a.get()))
+}
+
+/// Restores the previous ambient context on drop.
+pub struct AmbientGuard {
+    prev: Option<SpanCtx>,
+}
+
+/// Install `ctx` as this thread's ambient parent context (RAII). The
+/// worker pool wraps each claimed job in this so spans opened on the
+/// worker parent onto the span that published the job.
+pub fn set_ambient(ctx: Option<SpanCtx>) -> AmbientGuard {
+    let prev = AMBIENT.with(|a| a.replace(ctx));
+    AmbientGuard { prev }
+}
+
+impl Drop for AmbientGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        AMBIENT.with(|a| a.set(prev));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spans
+// ---------------------------------------------------------------------------
+
+/// One completed span as stored in the flight recorder.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    pub name: &'static str,
+    pub trace_id: u64,
+    pub span_id: u64,
+    /// 0 = root.
+    pub parent_id: u64,
+    /// Nanoseconds since the process trace epoch (first span ever).
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Small stable per-thread id (chrome `tid`).
+    pub tid: u64,
+    pub attrs: Vec<(&'static str, String)>,
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+struct ActiveSpan {
+    rec: SpanRecord,
+    t0: Instant,
+}
+
+/// RAII span guard. [`TraceSpan::enter`] while tracing is disabled is a
+/// single relaxed load returning an inert guard — no allocation, no
+/// thread-local traffic, nothing recorded on drop.
+pub struct TraceSpan {
+    active: Option<Box<ActiveSpan>>,
+}
+
+impl TraceSpan {
+    /// An inert guard, for the `else` arm of an `enabled()` branch.
+    pub fn noop() -> TraceSpan {
+        TraceSpan { active: None }
+    }
+
+    /// Open a span named `name`, parented on [`current`] (new trace root
+    /// if there is none), and make it the thread's current span.
+    pub fn enter(name: &'static str) -> TraceSpan {
+        if !enabled() {
+            return TraceSpan::noop();
+        }
+        let (trace_id, parent_id) = match current() {
+            Some(c) => (c.trace_id, c.span_id),
+            None => (next_id(), 0),
+        };
+        let span_id = next_id();
+        STACK.with(|s| s.borrow_mut().push(SpanCtx { trace_id, span_id }));
+        let ep = epoch();
+        let t0 = Instant::now();
+        let rec = SpanRecord {
+            name,
+            trace_id,
+            span_id,
+            parent_id,
+            start_ns: t0.saturating_duration_since(ep).as_nanos() as u64,
+            dur_ns: 0,
+            tid: tid(),
+            attrs: Vec::new(),
+        };
+        TraceSpan {
+            active: Some(Box::new(ActiveSpan { rec, t0 })),
+        }
+    }
+
+    /// Attach a `key=value` attribute (builder style). No-op when inert.
+    pub fn attr(mut self, key: &'static str, value: impl Into<String>) -> TraceSpan {
+        if let Some(a) = &mut self.active {
+            a.rec.attrs.push((key, value.into()));
+        }
+        self
+    }
+
+    /// This span's context, for handing to [`set_ambient`] on another
+    /// thread. `None` when inert.
+    pub fn ctx(&self) -> Option<SpanCtx> {
+        self.active.as_ref().map(|a| SpanCtx {
+            trace_id: a.rec.trace_id,
+            span_id: a.rec.span_id,
+        })
+    }
+}
+
+impl Drop for TraceSpan {
+    fn drop(&mut self) {
+        if let Some(mut a) = self.active.take() {
+            a.rec.dur_ns = a.t0.elapsed().as_nanos() as u64;
+            let id = a.rec.span_id;
+            STACK.with(|s| {
+                let mut st = s.borrow_mut();
+                // RAII nesting makes our entry the top; stay correct if
+                // a guard escaped its scope out of order.
+                match st.last() {
+                    Some(c) if c.span_id == id => {
+                        st.pop();
+                    }
+                    _ => {
+                        if let Some(i) = st.iter().rposition(|c| c.span_id == id) {
+                            st.remove(i);
+                        }
+                    }
+                }
+            });
+            recorder().record(a.rec);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Flight recorder
+// ---------------------------------------------------------------------------
+
+/// Lock-sharded bounded ring of the last [`RING_CAPACITY`] completed
+/// spans. Sharded by span id so concurrent pool workers rarely contend;
+/// each shard drops its oldest span when full.
+pub struct FlightRecorder {
+    shards: Vec<Mutex<VecDeque<SpanRecord>>>,
+    cap_per_shard: usize,
+    recorded: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl FlightRecorder {
+    fn new(capacity: usize) -> FlightRecorder {
+        FlightRecorder {
+            shards: (0..SHARDS).map(|_| Mutex::new(VecDeque::new())).collect(),
+            cap_per_shard: capacity.div_ceil(SHARDS).max(1),
+            recorded: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    fn record(&self, rec: SpanRecord) {
+        let shard = (rec.span_id as usize) & (SHARDS - 1);
+        let mut q = self.shards[shard].lock().unwrap();
+        if q.len() >= self.cap_per_shard {
+            q.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        q.push_back(rec);
+        drop(q);
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn collect(&self, drain: bool) -> Vec<SpanRecord> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let mut q = shard.lock().unwrap();
+            if drain {
+                out.extend(q.drain(..));
+            } else {
+                out.extend(q.iter().cloned());
+            }
+        }
+        out.sort_by_key(|r| (r.start_ns, r.span_id));
+        out
+    }
+
+    /// Spans currently buffered.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total spans ever recorded (including since-dropped ones).
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// Spans evicted because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+fn recorder() -> &'static FlightRecorder {
+    static RECORDER: OnceLock<FlightRecorder> = OnceLock::new();
+    RECORDER.get_or_init(|| {
+        // Export ring health through the metrics registry; the closure
+        // only *runs* at snapshot time, well after init completes.
+        super::register_collector(std::sync::Arc::new(|snap| {
+            let r = recorder();
+            snap.counters
+                .insert("abws_trace_spans_recorded_total".into(), r.recorded());
+            snap.counters
+                .insert("abws_trace_spans_dropped_total".into(), r.dropped());
+            snap.counters
+                .insert("abws_trace_dumps_total".into(), DUMPS.load(Ordering::Relaxed));
+            snap.gauges
+                .insert("abws_trace_ring_spans".into(), r.len() as i64);
+        }));
+        FlightRecorder::new(RING_CAPACITY)
+    })
+}
+
+/// Copy the buffered spans out, oldest first; the ring keeps them.
+pub fn snapshot_spans() -> Vec<SpanRecord> {
+    recorder().collect(false)
+}
+
+/// Move the buffered spans out, oldest first, leaving the ring empty.
+pub fn drain_spans() -> Vec<SpanRecord> {
+    recorder().collect(true)
+}
+
+/// Empty the ring without returning anything (test isolation).
+pub fn clear() {
+    drop(recorder().collect(true));
+}
+
+// ---------------------------------------------------------------------------
+// chrome://tracing export + failure dumps
+// ---------------------------------------------------------------------------
+
+/// Serialize spans as the chrome trace-event format: one complete
+/// (`"ph":"X"`) event per span, microsecond timestamps, span identity
+/// and attributes under `args`. Events are emitted oldest-first.
+pub fn chrome_trace_json(spans: &[SpanRecord]) -> Json {
+    let mut sorted: Vec<&SpanRecord> = spans.iter().collect();
+    sorted.sort_by_key(|r| (r.start_ns, r.span_id));
+    let mut events: Vec<Json> = Vec::with_capacity(sorted.len());
+    for r in sorted {
+        let mut args = Json::obj();
+        args.set("trace_id", format!("{:016x}", r.trace_id));
+        args.set("span_id", format!("{:016x}", r.span_id));
+        args.set("parent_id", format!("{:016x}", r.parent_id));
+        for (k, v) in &r.attrs {
+            args.set(k, v.as_str());
+        }
+        let mut e = Json::obj();
+        e.set("name", r.name);
+        e.set("cat", "abws");
+        e.set("ph", "X");
+        e.set("ts", r.start_ns as f64 / 1000.0);
+        e.set("dur", r.dur_ns as f64 / 1000.0);
+        e.set("pid", 1u64);
+        e.set("tid", r.tid);
+        e.set("args", args);
+        events.push(e);
+    }
+    let mut root = Json::obj();
+    root.set("traceEvents", events);
+    root.set("displayTimeUnit", "ms");
+    root
+}
+
+static DUMP_PATH: Mutex<Option<PathBuf>> = Mutex::new(None);
+static DUMPS: AtomicU64 = AtomicU64::new(0);
+
+/// Configure where failure dumps ([`dump_now`]) land. `None` disables
+/// them. Process-global so `ServeOptions` can stay `Copy`.
+pub fn set_dump_path(path: Option<PathBuf>) {
+    *DUMP_PATH.lock().unwrap() = path;
+}
+
+/// Write a chrome-trace snapshot of the ring to `path`. Returns the
+/// number of spans written. The ring is kept (use [`drain_to_file`] on
+/// clean shutdown).
+pub fn dump_to_file(path: &Path) -> std::io::Result<usize> {
+    let spans = snapshot_spans();
+    std::fs::write(path, chrome_trace_json(&spans).to_string())?;
+    Ok(spans.len())
+}
+
+/// Drain the ring into a chrome-trace file (clean-exit flush).
+pub fn drain_to_file(path: &Path) -> std::io::Result<usize> {
+    let spans = drain_spans();
+    std::fs::write(path, chrome_trace_json(&spans).to_string())?;
+    Ok(spans.len())
+}
+
+/// Best-effort failure dump: if tracing is enabled and a dump path is
+/// configured, snapshot the ring there. Called by serve when a request
+/// times out or panics, so every deadline miss ships with its span
+/// tree. Keeps the ring (later failures re-dump with more context).
+pub fn dump_now() {
+    if !enabled() {
+        return;
+    }
+    let path = DUMP_PATH.lock().unwrap().clone();
+    if let Some(p) = path {
+        if dump_to_file(&p).is_ok() {
+            DUMPS.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Trace state (enabled flag, ring, id counter) is process-global;
+    // tests that flip it serialize here.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    fn with_trace<F: FnOnce()>(seed: u64, f: F) -> Vec<SpanRecord> {
+        clear();
+        reseed(seed);
+        set_enabled(true);
+        f();
+        set_enabled(false);
+        drain_spans()
+    }
+
+    #[test]
+    fn disabled_enter_records_nothing() {
+        let _g = LOCK.lock().unwrap();
+        set_enabled(false);
+        clear();
+        let before = recorder().recorded();
+        {
+            let _s = TraceSpan::enter("never").attr("k", "v");
+        }
+        assert_eq!(recorder().recorded(), before);
+        assert!(current().is_none());
+    }
+
+    #[test]
+    fn nesting_sets_parent_ids() {
+        let _g = LOCK.lock().unwrap();
+        let spans = with_trace(11, || {
+            let root = TraceSpan::enter("root");
+            let root_ctx = root.ctx().unwrap();
+            {
+                let child = TraceSpan::enter("child");
+                let cctx = child.ctx().unwrap();
+                assert_eq!(cctx.trace_id, root_ctx.trace_id);
+                let _grand = TraceSpan::enter("grandchild");
+            }
+            drop(root);
+            assert!(current().is_none());
+        });
+        assert_eq!(spans.len(), 3);
+        let root = spans.iter().find(|s| s.name == "root").unwrap();
+        let child = spans.iter().find(|s| s.name == "child").unwrap();
+        let grand = spans.iter().find(|s| s.name == "grandchild").unwrap();
+        assert_eq!(root.parent_id, 0);
+        assert_eq!(child.parent_id, root.span_id);
+        assert_eq!(grand.parent_id, child.span_id);
+        assert!(spans.iter().all(|s| s.trace_id == root.trace_id));
+    }
+
+    #[test]
+    fn ambient_context_adopts_parent() {
+        let _g = LOCK.lock().unwrap();
+        let spans = with_trace(12, || {
+            let root = TraceSpan::enter("spawner");
+            let ctx = root.ctx();
+            std::thread::scope(|scope| {
+                scope.spawn(|| {
+                    let _amb = set_ambient(ctx);
+                    let _s = TraceSpan::enter("worker.child");
+                });
+            });
+            // Ambient restored after the guard dropped on that thread;
+            // this thread never saw it.
+            assert_eq!(current(), ctx);
+        });
+        let root = spans.iter().find(|s| s.name == "spawner").unwrap();
+        let child = spans.iter().find(|s| s.name == "worker.child").unwrap();
+        assert_eq!(child.parent_id, root.span_id);
+        assert_eq!(child.trace_id, root.trace_id);
+        assert_ne!(child.tid, root.tid);
+    }
+
+    #[test]
+    fn reseed_makes_ids_deterministic() {
+        let _g = LOCK.lock().unwrap();
+        let ids = |seed| {
+            let spans = with_trace(seed, || {
+                let _a = TraceSpan::enter("a");
+                let _b = TraceSpan::enter("b");
+            });
+            spans
+                .iter()
+                .map(|s| (s.trace_id, s.span_id, s.parent_id))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(ids(77), ids(77));
+        assert_ne!(ids(77), ids(78));
+    }
+
+    #[test]
+    fn ring_bounds_and_counts_drops() {
+        let _g = LOCK.lock().unwrap();
+        let spans = with_trace(13, || {
+            for _ in 0..(RING_CAPACITY + 256) {
+                let _s = TraceSpan::enter("filler");
+            }
+        });
+        assert!(spans.len() <= RING_CAPACITY + SHARDS);
+        assert!(recorder().dropped() > 0);
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let _g = LOCK.lock().unwrap();
+        let spans = with_trace(14, || {
+            let _r = TraceSpan::enter("req").attr("type", "advisor");
+            let _c = TraceSpan::enter("inner");
+        });
+        let j = chrome_trace_json(&spans);
+        let events = j.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        assert_eq!(events.len(), 2);
+        for e in events {
+            assert_eq!(e.get("ph").and_then(|p| p.as_str()), Some("X"));
+            assert!(e.get("ts").and_then(|t| t.as_f64()).is_some());
+            let args = e.get("args").unwrap();
+            assert!(args.get("span_id").is_some());
+        }
+        // Round-trips through the strict parser.
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn dump_now_writes_configured_path() {
+        let _g = LOCK.lock().unwrap();
+        let path =
+            std::env::temp_dir().join(format!("abws_trace_dump_{}.json", std::process::id()));
+        clear();
+        reseed(15);
+        set_enabled(true);
+        set_dump_path(Some(path.clone()));
+        {
+            let _s = TraceSpan::enter("failing.request");
+        }
+        dump_now();
+        set_dump_path(None);
+        set_enabled(false);
+        clear();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let j = Json::parse(&text).unwrap();
+        assert!(!j.get("traceEvents").and_then(|e| e.as_arr()).unwrap().is_empty());
+    }
+}

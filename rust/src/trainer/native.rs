@@ -13,6 +13,7 @@ use crate::softfloat::gemm::{
     rp_gemm_packed, GemmConfig, GemmCtx, Interrupted, Layout, QuantizedOperand,
 };
 use crate::softfloat::tensor::Tensor;
+use crate::telemetry::trace;
 use crate::trainer::loss::{accuracy, cross_entropy};
 use crate::trainer::metrics::{RunMetrics, StepRecord};
 use crate::trainer::sgd::{SgdConfig, SgdState};
@@ -178,6 +179,7 @@ impl NativeTrainer {
     /// Forward pass under an execution context (threads + deadline);
     /// `Err` if the deadline fired inside one of the GEMMs.
     fn forward_ctx(&self, x: &Tensor, ctx: &GemmCtx) -> Result<(Tensor, Tensor), Interrupted> {
+        let ctx = &GemmCtx { op: "fwd", ..*ctx };
         let fwd = &self.plan.fwd;
         let xq = QuantizedOperand::for_cfg(x, fwd);
         let h_pre = rp_gemm_packed(
@@ -206,8 +208,11 @@ impl NativeTrainer {
         let ctx = GemmCtx {
             threads: 0,
             deadline: self.cfg.deadline,
+            ..GemmCtx::default()
         };
         let (h, logits) = self.forward_ctx(x, &ctx)?;
+        let grad_ctx = GemmCtx { op: "grad", ..ctx };
+        let bwd_ctx = GemmCtx { op: "bwd", ..ctx };
         let (loss, mut dlogits) = cross_entropy(&logits, y);
         let acc = accuracy(&logits, y);
 
@@ -233,7 +238,7 @@ impl NativeTrainer {
 
         // GRAD GEMM: dW2 = hᵀ · dlogits (accumulation over the batch) —
         // the TN layout reads h transposed without materializing `h.t()`.
-        let dw2 = rp_gemm_packed(&hq, &dl_grad, grad, Layout::TN, &ctx)?;
+        let dw2 = rp_gemm_packed(&hq, &dl_grad, grad, Layout::TN, &grad_ctx)?;
         // BWD GEMM: dh = dlogits · W2ᵀ (accumulation over classes) — NT
         // reuses the same packed W2 the forward pass quantized.
         let mut dh = rp_gemm_packed(
@@ -241,7 +246,7 @@ impl NativeTrainer {
             WeightCache::get(&mut self.cache.borrow_mut().w2, &self.w2, bwd),
             bwd,
             Layout::NT,
-            &ctx,
+            &bwd_ctx,
         )?;
         // ReLU backward mask — this is what makes BWD/GRAD operands
         // sparse (NZR ≈ 0.5), as §4.3 models.
@@ -252,7 +257,7 @@ impl NativeTrainer {
         }
         // GRAD GEMM: dW1 = xᵀ · dh.
         let dhq = QuantizedOperand::for_cfg(&dh, grad);
-        let dw1 = rp_gemm_packed(&xq, &dhq, grad, Layout::TN, &ctx)?;
+        let dw1 = rp_gemm_packed(&xq, &dhq, grad, Layout::TN, &grad_ctx)?;
 
         // Apply updates only after every GEMM succeeded, then drop the
         // packed weights: they describe the pre-update values.
@@ -282,6 +287,11 @@ impl NativeTrainer {
             }
             let (xb, yb) = data.batch(step, self.cfg.batch);
             let timer = tel.as_ref().map(|_| crate::telemetry::Timer::start());
+            let _tspan = if trace::enabled() {
+                trace::TraceSpan::enter("train.step").attr("step", step.to_string())
+            } else {
+                trace::TraceSpan::noop()
+            };
             let (loss, acc) = match self.step(&xb, &yb) {
                 Ok(v) => v,
                 // The deadline fired between row panels inside a GEMM:

@@ -130,6 +130,16 @@ fn solver_telemetry() -> &'static SolverTelemetry {
 /// every suitability check is O(n), so one `Instant` per solve is noise).
 pub fn min_m_acc(spec: &AccumSpec) -> u32 {
     let mut checks = 0u64;
+    let _span = if telemetry::trace::enabled() {
+        telemetry::trace::TraceSpan::enter("solver.min_m_acc")
+            .attr("n", spec.n.to_string())
+            .attr(
+                "chunk",
+                spec.chunk.map_or_else(|| "none".into(), |c| c.to_string()),
+            )
+    } else {
+        telemetry::trace::TraceSpan::noop()
+    };
     if !telemetry::enabled() {
         return min_m_acc_counted(spec, &mut checks);
     }

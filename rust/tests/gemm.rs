@@ -48,7 +48,7 @@ fn kernel_is_bit_identical_to_reference_at_every_thread_count() {
         for threads in [1usize, 2, 4] {
             let ctx = GemmCtx {
                 threads,
-                deadline: None,
+                ..GemmCtx::default()
             };
             let got = rp_gemm_ex(&a, &b, &cfg, Layout::NN, &ctx).unwrap();
             assert_eq!(bits(&got), want, "threads={threads} cfg={cfg:?}");
@@ -68,7 +68,7 @@ fn layouts_are_bit_identical_to_materialized_transposes() {
         for threads in [1usize, 2, 4] {
             let ctx = GemmCtx {
                 threads,
-                deadline: None,
+                ..GemmCtx::default()
             };
             let nt = rp_gemm_ex(&a, &b_t, &cfg, Layout::NT, &ctx).unwrap();
             assert_eq!(bits(&nt), want, "NT threads={threads} cfg={cfg:?}");
@@ -87,7 +87,7 @@ fn edge_shapes_k_zero_and_one_by_one() {
         for threads in [1usize, 2, 4] {
             let ctx = GemmCtx {
                 threads,
-                deadline: None,
+                ..GemmCtx::default()
             };
             let out = rp_gemm_ex(&a, &b, &cfg, Layout::NN, &ctx).unwrap();
             assert_eq!(out.shape, vec![3, 2]);
@@ -100,7 +100,7 @@ fn edge_shapes_k_zero_and_one_by_one() {
         for threads in [1usize, 2, 4] {
             let ctx = GemmCtx {
                 threads,
-                deadline: None,
+                ..GemmCtx::default()
             };
             let out = rp_gemm_ex(&a, &b, &cfg, Layout::NN, &ctx).unwrap();
             assert_eq!(bits(&out), want, "cfg={cfg:?}");
@@ -137,6 +137,7 @@ fn deadline_interrupts_between_row_panels() {
     let ctx = GemmCtx {
         threads: 2,
         deadline: Some(std::time::Instant::now() - std::time::Duration::from_millis(1)),
+        ..GemmCtx::default()
     };
     let r = rp_gemm_ex(&a, &b, &GemmConfig::paper(8, Some(64)), Layout::NN, &ctx);
     assert_eq!(r.err(), Some(Interrupted));
